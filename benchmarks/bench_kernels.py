@@ -1,0 +1,40 @@
+"""Kernel micro-bench: synapse_attention / landmark_score vs jnp reference.
+
+CPU container: the Pallas kernels run in interpret mode, so absolute times
+are NOT TPU times — reported for harness completeness; the jnp reference
+numbers are the meaningful CPU datapoints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def run() -> dict:
+    out = {}
+    for (B, H, Hkv, D, T) in [(4, 16, 4, 128, 1024), (8, 32, 8, 128, 4096)]:
+        ks = jax.random.split(jax.random.key(0), 4)
+        q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+        keys = jax.random.normal(ks[1], (B, T, Hkv, D), jnp.float32)
+        vals = jax.random.normal(ks[2], (B, T, Hkv, D), jnp.float32)
+        valid = jnp.ones((B, T), bool)
+        lm = jax.random.normal(ks[3], (B, 64, D), jnp.float32)
+
+        jref = jax.jit(ref.synapse_attention_ref)
+        us_ref = time_fn(jref, q, keys, vals, valid, iters=5)
+        emit(f"kernel.synapse_attention.ref.B{B}T{T}", us_ref, "jnp oracle (CPU)")
+        us_int = time_fn(lambda *a: ops.synapse_attention(*a), q, keys, vals, valid, iters=2)
+        emit(f"kernel.synapse_attention.pallas_interpret.B{B}T{T}", us_int, "interpret mode")
+
+        jref2 = jax.jit(ref.landmark_score_ref)
+        us_ref2 = time_fn(jref2, q, keys, lm, iters=5)
+        emit(f"kernel.landmark_score.ref.B{B}T{T}", us_ref2, "jnp oracle (CPU)")
+        out[f"B{B}T{T}"] = {"attn_ref_us": us_ref, "score_ref_us": us_ref2}
+    return out
+
+
+if __name__ == "__main__":
+    run()

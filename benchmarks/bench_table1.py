@@ -1,0 +1,44 @@
+"""Paper Table 1: theoretical VRAM comparison (0.5B model, 24 GB card).
+
+Derived entirely from exact byte accounting of the real qwen2.5-0.5b config
+(bf16 weights, 4k context full cache vs k=64 synapse).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import cache as cache_lib
+
+GB = 1 << 30
+CARD = 24 * GB
+
+
+def run() -> dict:
+    cfg = get_config("qwen2.5-0.5b")
+    w_bytes = cfg.param_count() * 2  # bf16
+    full = cache_lib.cache_bytes(cache_lib.init_full_cache(cfg, 1, 32768)) * cfg.n_layers
+    syn = cache_lib.cache_bytes(
+        cache_lib.init_synapse_cache(cfg, 1, n_landmarks=64, window=64, n_inject=8)
+    ) * cfg.n_layers
+
+    std_max = int((CARD - w_bytes) // (w_bytes + full))   # each agent: weights + full ctx
+    wc_max = int((CARD - w_bytes) // syn)                 # shared weights + synapse each
+
+    emit("table1.main_weights_gb", 0, f"{w_bytes/GB:.2f}")
+    emit("table1.side_agent_weights_gb.standard", 0, f"{w_bytes/GB:.2f}")
+    emit("table1.side_agent_weights_gb.warp_cortex", 0, "0.00 (shared)")
+    emit("table1.side_agent_context_gb.standard", 0, f"{full/GB:.3f} (32k full)")
+    emit("table1.side_agent_context_gb.warp_cortex", 0, f"{syn/GB:.4f} (synapse)")
+    emit("table1.max_agents_24gb.standard", 0, str(std_max))
+    emit("table1.max_agents_24gb.warp_cortex", 0, str(wc_max))
+    return {
+        "weights_gb": w_bytes / GB,
+        "full_ctx_gb": full / GB,
+        "synapse_gb": syn / GB,
+        "max_agents_standard": std_max,
+        "max_agents_warp_cortex": wc_max,
+    }
+
+
+if __name__ == "__main__":
+    run()

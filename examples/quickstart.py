@@ -1,0 +1,43 @@
+"""Quickstart: batched serving of a small model with the public API.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch smollm-135m]
+
+Uses the reduced (CPU-sized) variant of any assigned architecture.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import model as model_lib
+from repro.serving.sampler import SamplingParams
+from repro.serving.server import BatchServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-0.5b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    print(f"[quickstart] arch={args.arch} (reduced: {cfg.n_layers}L d={cfg.d_model})")
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    tok = ByteTokenizer(cfg.vocab_size)
+    server = BatchServer(
+        params, cfg, tok, n_lanes=4, capacity=256,
+        sampling=SamplingParams(temperature=0.9, top_k=40),
+    )
+    for i in range(args.requests):
+        server.submit(f"request {i}: tell me something.", max_new_tokens=args.max_new_tokens)
+    done = server.run_until_done()
+    for r in done:
+        print(f"[req {r.rid}] {r.prompt!r} -> {r.text!r}")
+
+
+if __name__ == "__main__":
+    main()

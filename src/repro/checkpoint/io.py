@@ -1,0 +1,59 @@
+"""Checkpointing: msgpack + zstd pytree serialization (no orbax).
+
+Arrays are stored as (dtype, shape, raw bytes); the tree structure is
+round-tripped via flatten-with-path so arbitrary nested dict/list/dataclass
+param trees survive.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _encode_tree(tree) -> bytes:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = []
+    for path, leaf in leaves_with_paths:
+        arr = np.asarray(leaf)
+        payload.append(
+            {
+                "path": jax.tree_util.keystr(path),
+                "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "data": arr.tobytes(),
+            }
+        )
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def save(path: str, tree, *, level: int = 3) -> None:
+    raw = _encode_tree(tree)
+    comp = zstandard.ZstdCompressor(level=level).compress(raw)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(comp)
+    os.replace(tmp, path)
+
+
+def load(path: str, like):
+    """Restore into the structure of `like` (a pytree with array leaves)."""
+    with open(path, "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    by_path = {p["path"]: p for p in payload}
+    leaves_with_paths, tdef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves_with_paths:
+        key = jax.tree_util.keystr(path)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        rec = by_path[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(tdef, out)

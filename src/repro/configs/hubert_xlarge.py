@@ -1,0 +1,21 @@
+"""HuBERT-XLarge [arXiv:2106.07447] — encoder-only audio transformer.
+
+Conv/mel frontend is stubbed: input_specs() provides frame embeddings.
+vocab=504 is the k-means target codebook (masked-prediction training).
+No decode shapes (encoder-only) — see DESIGN.md §4.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,
+    rope_kind="none",
+    embed_inputs=False,
+)

@@ -1,0 +1,23 @@
+"""Qwen2-VL-72B [arXiv:2409.12191] — M-RoPE decoder; vision frontend stubbed.
+
+input_specs() feeds precomputed patch+text embeddings (DESIGN.md carve-out);
+the decoder still owns the embedding table + lm head for text decode.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    arch_type="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=29568,
+    vocab_size=152064,
+    rope_kind="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    embed_inputs=False,
+)

@@ -1,0 +1,322 @@
+"""The Cortex Engine — River & Stream topology on TPU (DESIGN.md §3).
+
+The paper runs the main agent ("River") and side agents ("Streams") on
+concurrent CUDA streams. The TPU-native equivalent implemented here:
+
+* ONE Prism (shared weights) — no per-agent copies (paper §3.2).
+* Main agents are lanes of a batched full-cache ``decode_step``; side agents
+  are lanes of a batched synapse-cache ``decode_step``. Each engine `tick`
+  advances both batches by one fused step — concurrency through batching,
+  priority through admission policy (main lanes are always stepped; side
+  lanes only while active).
+* Logical asynchrony is preserved: a side agent reasons over the landmark
+  snapshot taken at spawn time (token t-k) while the river continues past t.
+* Spawn = hybrid landmark compression of the parent's cache (paper §3.3);
+  merge = Validation Gate (§3.5) then Referential Injection (§3.6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gate as gate_lib
+from repro.core import injection
+from repro.core import synapse as synapse_lib
+from repro.core.prism import Prism, tree_bytes
+from repro.core.router import CortexRouter, Trigger
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import cache as cache_lib
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.serving.sampler import SamplingParams, sample
+
+
+def _lane_slice(tree, lane: int):
+    """Select batch lane (axis 1 — axis 0 is the stacked layer dim)."""
+    return jax.tree.map(lambda a: a[:, lane], tree)
+
+
+def _lane_write(dst, src_tree, dst_lane: int, src_lane: int):
+    """dst[:, dst_lane] <- src[:, src_lane] across a stacked cache pytree."""
+    return jax.tree.map(lambda d, s: d.at[:, dst_lane].set(s[:, src_lane].astype(d.dtype)), dst, src_tree)
+
+
+def spawn_caches(cfg: ModelConfig, main_caches: model_lib.ModelCaches, spec: model_lib.CacheSpec):
+    """Compress a main agent's caches into fresh side-agent synapse caches.
+
+    Attention groups: hybrid landmark compression (density = the cache's
+    accumulated attention mass). SSM groups: the state is already O(1) — the
+    side agent receives a copy (zero marginal context, noted in DESIGN.md).
+    MLA: the latent cache is compressed by landmark selection on the latent
+    point cloud is future work; sides receive the latent cache as-is.
+    """
+    groups = []
+    for grp, c in zip(cfg.layer_groups(), main_caches.groups):
+        if grp.kind == "attn" and isinstance(c, cache_lib.FullCache):
+            comp = jax.vmap(
+                lambda layer_cache: synapse_lib.compress(
+                    cfg, layer_cache, None, spec.n_landmarks, spec.window, spec.n_inject, spec.policy
+                )
+            )(c)
+            groups.append(comp)
+        else:
+            groups.append(c)
+    shared = main_caches.shared
+    if shared is not None and isinstance(shared, cache_lib.FullCache):
+        shared = jax.vmap(
+            lambda layer_cache: synapse_lib.compress(
+                cfg, layer_cache, None, spec.n_landmarks, spec.window, spec.n_inject, spec.policy
+            )
+        )(shared)
+    return model_lib.ModelCaches(groups=tuple(groups), shared=shared)
+
+
+@dataclass
+class AgentView:
+    """Host-side bookkeeping for one agent lane."""
+
+    agent_id: str
+    lane: int
+    kind: str                  # "main" | "side"
+    parent_lane: int = -1
+    task: str = ""
+    text: str = ""
+    tokens: list = field(default_factory=list)
+    position: int = 0          # next rope position
+    active: bool = False
+    steps: int = 0
+    pending_prompt: list = field(default_factory=list)
+    prompt_len: int = 0
+
+
+class CortexEngine:
+    def __init__(
+        self,
+        prism: Prism,
+        tokenizer: ByteTokenizer,
+        *,
+        n_main: int = 1,
+        max_side: int = 8,
+        main_capacity: int = 1024,
+        side_spec: model_lib.CacheSpec | None = None,
+        theta: float = 0.5,
+        inject_tokens: int = 16,
+        side_max_steps: int = 64,
+        sampling: SamplingParams = SamplingParams(temperature=0.8),
+        seed: int = 0,
+    ):
+        self.prism = prism
+        self.cfg = prism.cfg
+        self.tok = tokenizer
+        self.router = CortexRouter()
+        self.theta = theta
+        self.inject_tokens = inject_tokens
+        self.side_max_steps = side_max_steps
+        self.sampling = sampling
+        self._key = jax.random.key(seed)
+
+        self.main_spec = model_lib.CacheSpec(kind="full", capacity=main_capacity)
+        self.side_spec = side_spec or model_lib.CacheSpec(
+            kind="synapse", n_landmarks=64, window=64, n_inject=inject_tokens
+        )
+        self.n_main, self.max_side = n_main, max_side
+        self.main_caches = model_lib.init_caches(self.cfg, n_main, self.main_spec)
+        self.side_caches = model_lib.init_caches(self.cfg, max_side, self.side_spec)
+        self.mains = [AgentView(f"main{i}", i, "main") for i in range(n_main)]
+        self.sides = [AgentView(f"side{i}", i, "side") for i in range(max_side)]
+        self.main_hidden = jnp.zeros((n_main, self.cfg.d_model), jnp.float32)
+        self.side_hidden = jnp.zeros((max_side, self.cfg.d_model), jnp.float32)
+        self.history: list[dict] = []
+
+        cfg = self.cfg
+        self._jit_prefill_main = jax.jit(
+            lambda p, toks, c: model_lib.prefill(p, cfg, {"tokens": toks}, c, spec=self.main_spec)
+        )
+        self._jit_decode_main = jax.jit(
+            lambda p, toks, pos, c: model_lib.decode_step(
+                p, cfg, {"tokens": toks, "positions": pos}, c, spec=self.main_spec
+            )
+        )
+        self._jit_decode_side = jax.jit(
+            lambda p, toks, pos, c: model_lib.decode_step(
+                p, cfg, {"tokens": toks, "positions": pos}, c, spec=self.side_spec
+            )
+        )
+        self._jit_spawn = jax.jit(lambda c: spawn_caches(cfg, c, self.side_spec))
+        self._jit_encode = jax.jit(
+            lambda p, toks, vpos: injection.encode_thought_kv(p, cfg, toks, vpos)
+        )
+        self._jit_inject = jax.jit(
+            lambda mc, tc, accept: injection.inject(cfg, mc, tc, accept)
+        )
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def submit(self, prompt: str, lane: int = 0):
+        """Start (or restart) a main agent on `lane` with `prompt`."""
+        ids = self.tok.encode(prompt, bos=True)
+        toks = jnp.asarray([ids], jnp.int32)
+        # prefill writes lanes batched; run on a single-lane cache then copy in
+        lane_cache = jax.tree.map(lambda a: a[:, lane : lane + 1], self.main_caches)
+        logits, hidden, lane_cache = self._jit_prefill_main(self.prism.params, toks, lane_cache)
+        self.main_caches = jax.tree.map(
+            lambda full, part: full.at[:, lane : lane + 1].set(part), self.main_caches, lane_cache
+        )
+        m = self.mains[lane]
+        m.text, m.tokens = prompt, list(ids)
+        m.position, m.active, m.steps = len(ids), True, 0
+        self.main_hidden = self.main_hidden.at[lane].set(hidden[0])
+        self.prism.acquire(m.agent_id)
+        return m
+
+    # ------------------------------------------------------------------
+    def _step_main(self):
+        active = [m for m in self.mains if m.active]
+        if not active:
+            return
+        toks = jnp.asarray([m.tokens[-1] if m.tokens else 0 for m in self.mains], jnp.int32)
+        pos = jnp.asarray([m.position for m in self.mains], jnp.int32)
+        logits, hidden, new_caches = self._jit_decode_main(
+            self.prism.params, toks, pos, self.main_caches
+        )
+        new_tok = sample(self._next_key(), logits, self.sampling)
+        new_tok_np = np.asarray(new_tok)
+        for m in self.mains:
+            if not m.active:
+                continue
+            t = int(new_tok_np[m.lane])
+            m.tokens.append(t)
+            m.text += self.tok.decode([t])
+            m.position += 1
+            m.steps += 1
+        self.main_caches = new_caches
+        self.main_hidden = hidden
+
+    # ------------------------------------------------------------------
+    def _free_side_lane(self) -> int:
+        for s in self.sides:
+            if not s.active:
+                return s.lane
+        return -1
+
+    def _spawn_side(self, parent: AgentView, task: str):
+        lane = self._free_side_lane()
+        if lane < 0:
+            return None  # admission policy: drop when streams are saturated
+        compressed = self._jit_spawn(self.main_caches)
+        self.side_caches = _lane_write(self.side_caches, compressed, lane, parent.lane)
+        s = self.sides[lane]
+        s.task, s.text = task, ""
+        s.parent_lane = parent.lane
+        s.tokens = self.tok.encode(f"[TASK: {task}]")
+        s.position = parent.position  # continues the stream's positional frame
+        s.active, s.steps = True, 0
+        s.pending_prompt = list(s.tokens)  # teacher-forced before free generation
+        s.prompt_len = len(s.tokens)
+        self.prism.acquire(s.agent_id)
+        self.history.append({"event": "spawn", "agent": s.agent_id, "task": task})
+        return s
+
+    def _step_sides(self):
+        if not any(s.active for s in self.sides):
+            return
+        toks, pos = [], []
+        for s in self.sides:
+            if s.active and getattr(s, "pending_prompt", None):
+                toks.append(s.pending_prompt.pop(0))
+            elif s.active and s.tokens:
+                toks.append(s.tokens[-1])
+            else:
+                toks.append(0)
+            pos.append(s.position if s.active else 0)
+        logits, hidden, new_caches = self._jit_decode_side(
+            self.prism.params,
+            jnp.asarray(toks, jnp.int32),
+            jnp.asarray(pos, jnp.int32),
+            self.side_caches,
+        )
+        new_tok = np.asarray(sample(self._next_key(), logits, self.sampling))
+        self.side_caches = new_caches
+        self.side_hidden = hidden
+        finished = []
+        for s in self.sides:
+            if not s.active:
+                continue
+            s.position += 1
+            s.steps += 1
+            if s.pending_prompt:
+                continue  # still consuming the task prompt
+            t = int(new_tok[s.lane])
+            s.tokens.append(t)
+            s.text += self.tok.decode([t])
+            trig = [tr for tr in self.router.scan(s.agent_id, s.text) if tr.kind in ("done", "answer")]
+            generated = s.steps - getattr(s, "prompt_len", 0)
+            if trig or generated >= self.side_max_steps:
+                finished.append((s, next((tr.payload for tr in trig if tr.kind == "answer"), s.text)))
+        for s, thought in finished:
+            self._merge_side(s, thought)
+
+    # ------------------------------------------------------------------
+    def _merge_side(self, s: AgentView, thought: str):
+        parent = self.mains[s.parent_lane]
+        ids = self.tok.encode(thought)[-self.inject_tokens :]
+        ids = ids + [self.tok.pad_id] * (self.inject_tokens - len(ids))
+        toks = jnp.tile(jnp.asarray(ids, jnp.int32)[None], (self.n_main, 1))
+        vpos = jnp.asarray([m.position for m in self.mains], jnp.int32)  # virtual index
+        thought_caches, t_hidden = self._jit_encode(self.prism.params, toks, vpos)
+        accept_vec, score = gate_lib.validate(
+            self.main_hidden, t_hidden, self.theta
+        )
+        lane_mask = jnp.arange(self.n_main) == s.parent_lane
+        accept = accept_vec & lane_mask
+        accepted = bool(np.asarray(accept)[s.parent_lane])
+        if accepted:
+            self.main_caches = self._jit_inject(self.main_caches, thought_caches, accept)
+            parent.position += 0  # stream positions untouched (referential)
+        self.history.append(
+            {
+                "event": "merge",
+                "agent": s.agent_id,
+                "accepted": accepted,
+                "gate_score": float(np.asarray(score)[s.parent_lane]),
+                "thought": thought[:80],
+            }
+        )
+        self.router.reset(s.agent_id)
+        self.prism.release(s.agent_id)
+        s.active = False
+
+    # ------------------------------------------------------------------
+    def tick(self):
+        """One scheduler tick: river step, router scan, stream step."""
+        self._step_main()
+        for m in self.mains:
+            if not m.active:
+                continue
+            for tr in self.router.scan(m.agent_id, m.text):
+                if tr.kind == "task":
+                    self._spawn_side(m, tr.payload)
+        self._step_sides()
+
+    def run(self, n_ticks: int):
+        for _ in range(n_ticks):
+            self.tick()
+
+    # ------------------------------------------------------------------
+    def memory_report(self) -> dict:
+        per_agent = {}
+        for m in self.mains:
+            if m.active:
+                per_agent[m.agent_id] = tree_bytes(_lane_slice(self.main_caches, m.lane))
+        for s in self.sides:
+            if s.active:
+                per_agent[s.agent_id] = tree_bytes(_lane_slice(self.side_caches, s.lane))
+        return self.prism.memory_report(per_agent)

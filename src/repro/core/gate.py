@@ -1,0 +1,25 @@
+"""Validation Gate (paper §3.5, Eq. 2).
+
+Geometric quality control: a side thought is merged only if the cosine
+similarity between its terminal hidden state and the main agent's current
+hidden state clears a threshold theta (paper default 0.5). Prevents
+"hallucination cascades" from polluting the main stream.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_score(h_main, t_side, eps: float = 1e-8):
+    """Eq. 2: h_main, t_side: [B, d] -> [B] f32."""
+    a = h_main.astype(jnp.float32)
+    b = t_side.astype(jnp.float32)
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + eps
+    return num / den
+
+
+def validate(h_main, t_side, theta: float = 0.5):
+    """Returns (accept [B] bool, score [B] f32)."""
+    score = cosine_score(h_main, t_side)
+    return score >= theta, score

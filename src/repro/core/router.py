@@ -1,0 +1,50 @@
+"""Cortex Router (paper §3.4): regex intent extraction on the decoded stream.
+
+Host-side by design (it inspects sampled text, not device tensors). Triggers:
+  [TASK: <description>]   -> spawn a side agent with <description> as prompt
+  [DONE]                  -> side agent self-terminates
+  [ANSWER: <text>]        -> side agent reports its thought
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+TASK_RE = re.compile(r"\[TASK:\s*([^\]]+)\]")
+DONE_RE = re.compile(r"\[DONE\]")
+ANSWER_RE = re.compile(r"\[ANSWER:\s*([^\]]+)\]")
+
+
+@dataclass(frozen=True)
+class Trigger:
+    kind: str          # "task" | "done" | "answer"
+    payload: str
+    span: tuple[int, int]
+
+
+class CortexRouter:
+    """Incremental scanner: feed decoded text, get new triggers exactly once."""
+
+    def __init__(self):
+        self._scanned = {}
+
+    def scan(self, agent_id: str, text: str) -> list[Trigger]:
+        start = self._scanned.get(agent_id, 0)
+        # rescan a small overlap so split tags across chunk boundaries match
+        window_start = max(0, start - 256)
+        triggers: list[Trigger] = []
+        for m in TASK_RE.finditer(text, window_start):
+            if m.end() > start:
+                triggers.append(Trigger("task", m.group(1).strip(), m.span()))
+        for m in DONE_RE.finditer(text, window_start):
+            if m.end() > start:
+                triggers.append(Trigger("done", "", m.span()))
+        for m in ANSWER_RE.finditer(text, window_start):
+            if m.end() > start:
+                triggers.append(Trigger("answer", m.group(1).strip(), m.span()))
+        self._scanned[agent_id] = len(text)
+        triggers.sort(key=lambda t: t.span)
+        return triggers
+
+    def reset(self, agent_id: str):
+        self._scanned.pop(agent_id, None)

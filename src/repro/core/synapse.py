@@ -1,0 +1,280 @@
+"""The Topological Synapse (paper §3.3) — KV-cache landmark sparsification.
+
+Two modes:
+
+1. ``compress`` (paper-faithful): one-shot hybrid density-coverage landmark
+   selection from a full cache, used when spawning a side agent. The hybrid
+   score is
+       score_i = alpha * density_i + (1 - alpha) * coverage_i
+   where density_i is the paper's "Attention Score Summation" (softmax
+   attention mass of the main agent's current query over key i, summed over
+   heads — an inverse kernel-density estimate on the KV point cloud) and
+   coverage_i is the greedy maxmin (farthest-point) term that bounds the
+   Hausdorff distance of the landmark set to the context manifold. This is
+   exactly the hybrid landmarking of [Ruiz Williams 2025] ported to the
+   transformer latent space.
+
+2. ``synapse_decode`` (streaming extension, beyond-paper): the same policy
+   run online during decode — a recent-window ring plus a landmark buffer
+   with hybrid-score eviction. This makes dense-architecture decode O(K+W+J)
+   per step and is what unlocks the long_500k shape (DESIGN.md §4).
+
+Both operate per layer, vectorized over the batch/agent axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import synapse_sharded as sharded
+from repro.models import cache as cache_lib
+from repro.models.attention import decode_attend, _project_qkv, _rotate
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SynapsePolicy:
+    alpha: float = 0.5        # density vs coverage blend
+    score_ema: float = 0.99   # per-step decay of accumulated attention mass
+    coverage_cap: float = 4.0 # maxmin distances saturate here (normalized units)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+def _pool_heads(k):
+    """[..., Hkv, D] -> [..., D] mean over kv heads (coverage geometry)."""
+    return k.astype(jnp.float32).mean(axis=-2)
+
+
+def _normed_dist(a, b):
+    """||a-b|| / sqrt(d): a [..., T, D], b [..., D] -> [..., T]."""
+    d = a.shape[-1]
+    diff = a - b[..., None, :]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1) / d)
+
+
+def attention_density(q, keys, valid):
+    """Paper Eq. in §3.3: softmax attention mass per key, summed over heads.
+
+    q: [B, H, D]; keys: [B, T, Hkv, D]; valid: [B, T] -> [B, T] f32.
+    """
+    _, mass = decode_attend(q, keys, jnp.zeros_like(keys), valid)
+    return mass
+
+
+# ---------------------------------------------------------------------------
+# one-shot compression (paper-faithful side-agent spawn)
+# ---------------------------------------------------------------------------
+def select_landmarks(keys, valid, density, k: int, policy: SynapsePolicy):
+    """Greedy hybrid density-coverage selection.
+
+    keys: [B, T, Hkv, D]; valid: [B, T]; density: [B, T].
+    Returns indices [B, k] (sorted by position) and the hybrid scores [B, k].
+    """
+    B, T = density.shape
+    pooled = _pool_heads(keys)  # [B, T, D]
+    density = density / (jnp.max(density, axis=-1, keepdims=True) + 1e-9)
+    cap = policy.coverage_cap
+
+    def body(i, carry):
+        min_dist, chosen_idx, chosen_score, taken = carry
+        cov = jnp.minimum(min_dist, cap) / cap
+        score = policy.alpha * density + (1.0 - policy.alpha) * cov
+        score = jnp.where(valid & ~taken, score, NEG_INF)
+        idx = jnp.argmax(score, axis=-1)  # [B]
+        best = jnp.take_along_axis(score, idx[:, None], axis=-1)[:, 0]
+        new_lm = jnp.take_along_axis(pooled, idx[:, None, None], axis=1)[:, 0]  # [B, D]
+        min_dist = jnp.minimum(min_dist, _normed_dist(pooled, new_lm))
+        taken = taken | (jax.nn.one_hot(idx, T, dtype=bool))
+        chosen_idx = chosen_idx.at[:, i].set(idx)
+        chosen_score = chosen_score.at[:, i].set(best)
+        return min_dist, chosen_idx, chosen_score, taken
+
+    init = (
+        jnp.full((B, T), jnp.inf, jnp.float32),
+        jnp.zeros((B, k), jnp.int32),
+        jnp.zeros((B, k), jnp.float32),
+        jnp.zeros((B, T), bool),
+    )
+    _, idx, score, _ = jax.lax.fori_loop(0, k, body, init)
+    picked_valid = score > NEG_INF / 2  # False when T_valid < k (short prompts)
+    return idx, score, picked_valid
+
+
+def compress(
+    cfg: ModelConfig,
+    cache: cache_lib.FullCache,
+    query,  # [B, H, D] — the main agent's current query state (paper: Q_t), or
+            # None to use the cache's accumulated attention-mass density
+    n_landmarks: int,
+    window: int,
+    n_inject: int = 0,
+    policy: SynapsePolicy = SynapsePolicy(),
+) -> cache_lib.SynapseCache:
+    """Full cache -> SynapseCache for a freshly spawned side agent."""
+    B, T = cache.pos.shape
+    slots = jnp.arange(T)
+    valid = slots[None, :] < cache.length[:, None]
+    density = attention_density(query, cache.k, valid) if query is not None else cache.score
+    idx, score, picked = select_landmarks(cache.k, valid, density, n_landmarks, policy)
+    # stable order: sort landmarks by original position; invalid picks last
+    pos_sel = jnp.take_along_axis(cache.pos, idx, axis=1)
+    pos_sel = jnp.where(picked, pos_sel, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(pos_sel, axis=1)
+    idx = jnp.take_along_axis(idx, order, axis=1)
+    score = jnp.take_along_axis(score, order, axis=1)
+
+    gather = lambda a: jnp.take_along_axis(a, idx[:, :, None, None], axis=1)
+    syn = cache_lib.init_synapse_cache(
+        cfg, B, n_landmarks, window, n_inject, dtype=cache.k.dtype
+    )
+    k_valid = jnp.minimum(cache.length, n_landmarks)
+    return cache_lib.SynapseCache(
+        lm_k=gather(cache.k),
+        lm_v=gather(cache.v),
+        lm_pos=jnp.take_along_axis(cache.pos, idx, axis=1),
+        lm_score=score,
+        lm_count=k_valid,
+        win_k=syn.win_k,
+        win_v=syn.win_v,
+        win_pos=syn.win_pos,
+        win_score=syn.win_score,
+        inj_k=syn.inj_k,
+        inj_v=syn.inj_v,
+        inj_pos=syn.inj_pos,
+        inj_count=syn.inj_count,
+        win_count=jnp.zeros_like(cache.length),
+        length=cache.length,
+    )
+
+
+# ---------------------------------------------------------------------------
+# streaming decode over a SynapseCache
+# ---------------------------------------------------------------------------
+def synapse_decode(
+    attn_params,
+    cfg: ModelConfig,
+    x,          # [B, 1, dm]
+    cache: cache_lib.SynapseCache,
+    positions,  # [B] (or [B,3] mrope)
+    policy: SynapsePolicy = SynapsePolicy(),
+):
+    """One decode step: attend over [landmarks; window; inject slots], write
+    the new token into the window ring, graduate/evict on overflow.
+
+    Returns (y [B,1,dm], new_cache, stats dict).
+    """
+    B = x.shape[0]
+    K, W, J = cache.n_landmarks, cache.window, cache.n_inject
+    q, k, v = _project_qkv(attn_params, cfg, x)
+    if cfg.rope_kind == "mrope":
+        q = _rotate(cfg, q, positions[..., None])
+        k = _rotate(cfg, k, positions[..., None])
+        pos_scalar = positions[:, 0]
+    else:
+        q = _rotate(cfg, q, positions[..., None])
+        k = _rotate(cfg, k, positions[..., None])
+        pos_scalar = positions
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]
+
+    # ---- 1. graduation: the slot the new token will overwrite ----
+    # one-hot reads/writes shard over the token dim without scatter
+    # (EXPERIMENTS.md §Perf: SPMD 'involuntary full rematerialization').
+    slot = cache.win_count % W  # [B]
+    win_full = cache.win_count >= W
+    grad_k = sharded.onehot_read(cache.win_k, slot)      # [B, Hkv, D]
+    grad_v = sharded.onehot_read(cache.win_v, slot)
+    grad_pos = sharded.onehot_read(cache.win_pos, slot)
+    grad_score = sharded.onehot_read(cache.win_score, slot)
+
+    pooled_lm = _pool_heads(cache.lm_k)                   # [B, K, D]
+    grad_pooled = _pool_heads(grad_k[:, None])[:, 0]      # [B, D]
+    dist = _normed_dist(pooled_lm, grad_pooled)           # [B, K]
+    lm_slot_valid = jnp.arange(K)[None, :] < cache.lm_count[:, None]
+    min_dist = jnp.min(jnp.where(lm_slot_valid, dist, jnp.inf), axis=-1)
+    cov = jnp.minimum(jnp.where(jnp.isfinite(min_dist), min_dist, policy.coverage_cap), policy.coverage_cap) / policy.coverage_cap
+
+    # Rate-based comparison: landmark scores are EMAs that saturate at
+    # mass_rate/(1-ema) after long residency, while a graduating token only
+    # accumulated for ~W steps — comparing raw totals freezes the landmark
+    # set on the earliest tokens. Convert both to per-step attention-mass
+    # rates; the coverage bonus is scaled into rate units by the mean
+    # landmark rate so the hybrid blend stays dimensionally consistent.
+    one_minus_ema = max(1.0 - policy.score_ema, 1e-6)
+    resid = jnp.minimum(jnp.maximum(cache.win_count.astype(jnp.float32), 1.0), float(W))
+    grad_rate = grad_score / resid
+    lm_rate = cache.lm_score * one_minus_ema                      # [B, K]
+    lm_rate_masked = jnp.where(lm_slot_valid, lm_rate, jnp.inf)
+    min_lm_rate = jnp.min(lm_rate_masked, axis=-1)
+    mean_lm_rate = jnp.sum(jnp.where(lm_slot_valid, lm_rate, 0.0), axis=-1) / jnp.maximum(
+        cache.lm_count.astype(jnp.float32), 1.0
+    )
+    hybrid_rate = policy.alpha * grad_rate + (1 - policy.alpha) * cov * jnp.maximum(
+        mean_lm_rate, grad_rate
+    )
+
+    # candidate landmark slot: first empty, else argmin rate
+    evict_slot = jnp.where(
+        cache.lm_count < K,
+        cache.lm_count,
+        jnp.argmin(jnp.where(lm_slot_valid, lm_rate, jnp.inf), axis=-1),
+    )
+    promote = win_full & ((cache.lm_count < K) | (hybrid_rate > min_lm_rate))
+
+    lm_k = sharded.onehot_write(cache.lm_k, evict_slot, grad_k, mask=promote)
+    lm_v = sharded.onehot_write(cache.lm_v, evict_slot, grad_v, mask=promote)
+    lm_pos = sharded.onehot_write(cache.lm_pos, evict_slot, grad_pos, mask=promote)
+    # store back in EMA-steady units so future comparisons stay consistent
+    lm_score = sharded.onehot_write(
+        cache.lm_score, evict_slot, hybrid_rate / one_minus_ema, mask=promote
+    )
+    lm_count = jnp.where(promote, jnp.minimum(cache.lm_count + 1, K), cache.lm_count)
+
+    # ---- 2. write the new token into the ring ----
+    win_k = sharded.onehot_write(cache.win_k, slot, k1)
+    win_v = sharded.onehot_write(cache.win_v, slot, v1)
+    win_pos = sharded.onehot_write(cache.win_pos, slot, pos_scalar)
+    win_score = sharded.onehot_write(cache.win_score, slot, jnp.zeros((B,), jnp.float32))
+
+    # ---- 3. attend over [landmarks; window; inject] ----
+    # flash-decode over token-sharded pieces: only [B,Hkv,G] softmax stats
+    # cross chips (shard_map psum) instead of f32 copies of the buffers.
+    lm_valid = jnp.arange(K)[None, :] < lm_count[:, None]
+    win_valid = jnp.arange(W)[None, :] < jnp.minimum(cache.win_count + 1, W)[:, None]
+    inj_valid = jnp.arange(J)[None, :] < cache.inj_count[:, None]
+    scale = 1.0 / (q1.shape[-1] ** 0.5)
+    out, masses = sharded.piece_attend(
+        q1,
+        [(lm_k, lm_v), (win_k, win_v), (cache.inj_k, cache.inj_v)],
+        [lm_valid, win_valid, inj_valid],
+        scale,
+    )
+    y = out.reshape(B, -1) @ attn_params["wo"]
+
+    # ---- 4. accumulate attention mass (density statistic) ----
+    ema = policy.score_ema
+    lm_score = lm_score * ema + masses[0]
+    win_score = win_score * ema + masses[1]
+    mass = jnp.concatenate(masses, axis=1)
+
+    new_cache = cache_lib.SynapseCache(
+        lm_k=lm_k, lm_v=lm_v, lm_pos=lm_pos, lm_score=lm_score, lm_count=lm_count,
+        win_k=win_k, win_v=win_v, win_pos=win_pos, win_score=win_score,
+        inj_k=cache.inj_k, inj_v=cache.inj_v, inj_pos=cache.inj_pos,
+        inj_count=cache.inj_count, win_count=cache.win_count + 1,
+        length=cache.length + 1,
+    )
+    stats = {"promoted": promote, "attn_mass_landmarks": mass[:, :K].sum(-1)}
+    return y[:, None, :], new_cache, stats
+
+
+def synapse_bytes(cfg: ModelConfig, n_landmarks: int, window: int, n_inject: int, n_layers: int | None = None) -> int:
+    """Per-agent synapse footprint (the paper's ~10 MB claim)."""
+    syn = cache_lib.init_synapse_cache(cfg, 1, n_landmarks, window, n_inject)
+    per_layer = cache_lib.cache_bytes(syn)
+    return per_layer * (n_layers if n_layers is not None else cfg.n_layers)

@@ -1,0 +1,119 @@
+"""Sharding-aware primitives for the streaming synapse decode (§Perf).
+
+Two findings from the hillclimb drive this module (EXPERIMENTS.md §Perf,
+pair qwen3-8b x long_500k):
+
+1. GSPMD turns dynamic-index scatter/gather on token-sharded synapse buffers
+   into "involuntary full rematerialization" (replicate -> scatter ->
+   reshard), and the attend over the concat forces a per-step f32 all-gather
+   of every buffer. One-hot select/contract formulations are elementwise
+   over the token dim and shard for free.
+
+2. Softmax over a token-sharded axis cannot be expressed by GSPMD without a
+   gather; a shard_map flash-decode (local partial max/sum + psum combine)
+   moves only [B,Hkv,G]-sized statistics across chips instead of the
+   buffers themselves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+# Mesh axis the synapse token dims are sharded over (set by launch entry
+# points before tracing under a mesh; None = single-device / engine path).
+_SHARD_AXIS = None
+_MESH = None
+
+
+def set_shard_axis(axis: str | None, mesh=None):
+    global _SHARD_AXIS, _MESH
+    _SHARD_AXIS = axis
+    _MESH = mesh
+
+
+def get_shard_axis():
+    return _SHARD_AXIS
+
+
+def onehot_write(buf, slot, new, mask=None):
+    """buf [B,T,...] <- new [B,...] at per-lane `slot`, via one-hot select."""
+    T = buf.shape[1]
+    oh = jax.nn.one_hot(slot, T, dtype=bool)  # [B, T]
+    if mask is not None:
+        oh = oh & mask[:, None]
+    oh = oh.reshape(oh.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(oh, new[:, None].astype(buf.dtype), buf)
+
+
+def onehot_read(buf, slot):
+    """buf [B,T,...] -> [B,...] at per-lane slot (one-hot contraction)."""
+    T = buf.shape[1]
+    oh = jax.nn.one_hot(slot, T, dtype=jnp.float32)
+    out = jnp.einsum("bt,bt...->b...", oh, buf.astype(jnp.float32))
+    return out.astype(buf.dtype)
+
+
+def piece_attend(q, pieces, valids, scale):
+    """Flash-decode attend over token-sharded (k, v) pieces.
+
+    q: [B,H,D]; pieces: [(k_i, v_i)] with k_i/v_i [B,T_i,Hkv,D] sharded on
+    T_i over the configured axis; valids: [(B,T_i)] bools.
+    Returns (out [B,H,D], masses [(B,T_i)] — per-key probability mass).
+    Falls back to a plain local computation when no shard axis is set.
+    """
+    axis = _SHARD_AXIS
+    B, H, D = q.shape
+    Hkv = pieces[0][0].shape[2]
+    G = H // Hkv
+    sizes = [k.shape[1] for k, _ in pieces]
+
+    def body(q, *flat, use_psum: bool):
+        n = len(pieces)
+        ks, vs, ms = flat[:n], flat[n : 2 * n], flat[2 * n :]
+        k_loc = jnp.concatenate(ks, axis=1)
+        v_loc = jnp.concatenate(vs, axis=1)
+        valid_loc = jnp.concatenate(ms, axis=1)
+        qg = q.reshape(B, Hkv, G, D)
+        s = jnp.einsum("bkgd,btkd->bkgt", qg, k_loc).astype(jnp.float32) * scale
+        s = jnp.where(valid_loc[:, None, None, :], s, NEG_INF)
+        m_loc = jnp.max(s, axis=-1)
+        m = jax.lax.pmax(m_loc, axis) if use_psum else m_loc
+        e = jnp.exp(s - m[..., None])
+        denom = jnp.sum(e, axis=-1)
+        if use_psum:
+            denom = jax.lax.psum(denom, axis)
+        p = e / denom[..., None]
+        out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_loc.dtype), v_loc)
+        if use_psum:
+            out = jax.lax.psum(out, axis)
+        mass_loc = p.sum(axis=(1, 2))
+        local_sizes = [k.shape[1] for k in ks]
+        splits = list(np.cumsum(local_sizes))[:-1]
+        masses = jnp.split(mass_loc, splits, axis=1)
+        return (out.reshape(B, H, D), *masses)
+
+    flat = [k for k, _ in pieces] + [v for _, v in pieces] + list(valids)
+    if axis is None:
+        res = body(q, *flat, use_psum=False)
+        return res[0], list(res[1:])
+
+    from jax.sharding import PartitionSpec as P
+
+    tok = P(None, axis, None, None)
+    tokm = P(None, axis)
+    rep3 = P(None, None, None)
+    in_specs = (rep3, *([tok] * len(pieces)), *([tok] * len(pieces)), *([tokm] * len(pieces)))
+    out_specs = (rep3, *([tokm] * len(pieces)))
+    import functools
+
+    res = jax.shard_map(
+        functools.partial(body, use_psum=True),
+        mesh=_MESH,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+    )(q, *flat)
+    return res[0], list(res[1:])

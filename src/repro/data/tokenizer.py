@@ -1,0 +1,36 @@
+"""Byte-level tokenizer with a few control specials.
+
+Deterministic, dependency-free: token ids 0..255 are raw bytes; specials
+follow. Enough for the engine demos, router-trigger round-trips, and the
+synthetic training pipeline. Configs with larger vocabs simply leave the
+tail unused (ids < vocab_size always holds for vocab >= 272).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<task>", "<answer>"]
+
+
+class ByteTokenizer:
+    def __init__(self, vocab_size: int = 512):
+        assert vocab_size >= 256 + len(SPECIALS), vocab_size
+        self.vocab_size = vocab_size
+        self.pad_id = 256
+        self.bos_id = 257
+        self.eos_id = 258
+
+    def encode(self, text: str, *, bos: bool = False, eos: bool = False) -> list[int]:
+        ids = list(text.encode("utf-8"))
+        if bos:
+            ids = [self.bos_id] + ids
+        if eos:
+            ids = ids + [self.eos_id]
+        return ids
+
+    def decode(self, ids) -> str:
+        out = bytearray()
+        for i in np.asarray(ids).tolist():
+            if 0 <= i < 256:
+                out.append(i)
+        return out.decode("utf-8", errors="replace")

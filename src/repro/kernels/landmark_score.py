@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused hybrid landmark scoring pass (paper §3.3).
+
+One sweep over the KV cache computing BOTH selection terms per key:
+  * raw attention logits per query head (density term, pre-softmax — the
+    softmax normalizer is a cheap [B,H,T] reduction done by the wrapper), and
+  * min distance to the current landmark set (coverage term),
+so keys are read from HBM exactly once instead of twice. This is the
+bandwidth-bound half of the Topological Synapse; the tiny top-k/argmax that
+follows is XLA-native.
+
+Tiling: grid (B, T/blkT). Per program: keys block [blkT, Hkv, D] in VMEM,
+queries [H, D], landmark centroids [Kc, D]. blkT, D multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, lm_ref, logits_ref, dist_ref, *, scale: float, hkv: int, true_d: int):
+    # q_ref:  [H, D]; k_ref: [blkT, Hkv*D]; lm_ref: [Kc, D]
+    # logits_ref: [H, blkT]; dist_ref: [blkT]
+    q = q_ref[...].astype(jnp.float32)            # [H, D]
+    kflat = k_ref[...].astype(jnp.float32)        # [blkT, Hkv*D]
+    lm = lm_ref[...].astype(jnp.float32)          # [Kc, D]
+    blk_t = kflat.shape[0]
+    d = q.shape[1]
+    h = q.shape[0]
+    g = h // hkv
+    k = kflat.reshape(blk_t, hkv, d)
+
+    # density term: per-head q.k logits; head h uses kv head h // G
+    # compute per kv head then broadcast to its group rows
+    # s[kv, G, blkT]
+    qg = q.reshape(hkv, g, d)
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )  # [Hkv, G, blkT]
+    logits_ref[...] = (s.reshape(h, blk_t) * scale).astype(logits_ref.dtype)
+
+    # coverage term: min_j || mean_kv(k_t) - lm_j || / sqrt(d)
+    pooled = jnp.mean(k, axis=1)  # [blkT, D]
+    k2 = jnp.sum(pooled * pooled, axis=-1, keepdims=True)        # [blkT, 1]
+    l2 = jnp.sum(lm * lm, axis=-1)[None, :]                      # [1, Kc]
+    cross = jax.lax.dot_general(
+        pooled, lm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [blkT, Kc]
+    d2 = jnp.maximum(k2 + l2 - 2.0 * cross, 0.0)
+    dist_ref[...] = jnp.sqrt(jnp.min(d2, axis=-1) / true_d).astype(dist_ref.dtype)
+
+
+def landmark_score(q, keys, landmarks, *, scale: float | None = None, true_d: int | None = None, block_t: int = 512, interpret: bool = False):
+    """q: [B, H, D]; keys: [B, T, Hkv, D]; landmarks: [B, Kc, D] (pooled).
+
+    Returns (logits [B, H, T] f32 — pre-softmax density logits,
+             min_dist [B, T] f32 — normalized distance to landmark set).
+    T must be a multiple of block_t; D multiple of 128 (ops.py pads).
+    """
+    B, H, D = q.shape
+    T, Hkv = keys.shape[1], keys.shape[2]
+    Kc = landmarks.shape[1]
+    scale = (1.0 / (D ** 0.5)) if scale is None else scale
+    true_d = D if true_d is None else true_d
+    kflat = keys.reshape(B, T, Hkv * D)
+    grid = (B, T // block_t)
+    logits, dist = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, hkv=Hkv, true_d=true_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, H, D), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((None, block_t, Hkv * D), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((None, Kc, D), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, H, block_t), lambda b, t: (b, 0, t)),
+            pl.BlockSpec((None, block_t), lambda b, t: (b, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T), jnp.float32),
+            jax.ShapeDtypeStruct((B, T), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kflat, landmarks)
+    return logits, dist

@@ -1,0 +1,64 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to TPU tile alignment (T, D multiples of 128), dtype policy,
+and the interpret-mode switch (CPU container: interpret=True executes the
+kernel body in Python for correctness; on TPU the same code compiles to
+Mosaic). ``INTERPRET`` auto-detects the backend.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import landmark_score as _ls
+from repro.kernels import synapse_attention as _sa
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis: int, mult: int, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def synapse_attention(q, keys, values, valid, *, interpret: bool | None = None):
+    """Padded/aligned wrapper. q [B,H,D]; keys/values [B,T,Hkv,D]; valid [B,T]."""
+    interpret = INTERPRET if interpret is None else interpret
+    B, H, D = q.shape
+    T = keys.shape[1]
+    qp = _pad_to(q, 2, 128)
+    kp = _pad_to(_pad_to(keys, 3, 128), 1, 128)
+    vp = _pad_to(_pad_to(values, 3, 128), 1, 128)
+    validp = _pad_to(valid, 1, 128, value=False)
+    out, mass = _sa.synapse_attention(
+        qp, kp, vp, validp, scale=1.0 / (D ** 0.5), interpret=interpret
+    )
+    return out[:, :, :D], mass[:, :T]
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_t"))
+def landmark_score(q, keys, landmarks, *, block_t: int = 512, interpret: bool | None = None):
+    """Returns (density [B,T] — per-head softmax mass summed over heads,
+    min_dist [B,T]). Handles padding; softmax normalization over the true T."""
+    interpret = INTERPRET if interpret is None else interpret
+    B, H, D = q.shape
+    T = keys.shape[1]
+    block_t = min(block_t, max(128, ((T + 127) // 128) * 128))
+    qp = _pad_to(q, 2, 128)
+    kp = _pad_to(_pad_to(keys, 3, 128), 1, block_t)
+    lmp = _pad_to(landmarks, 2, 128)
+    logits, dist = _ls.landmark_score(
+        qp, kp, lmp, scale=1.0 / (D ** 0.5), true_d=D, block_t=block_t, interpret=interpret
+    )
+    logits = logits[:, :, :T]
+    dist = dist[:, :T]
+    density = jax.nn.softmax(logits, axis=-1).sum(axis=1)  # paper: sum_h softmax_h
+    return density, dist

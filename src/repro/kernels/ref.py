@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def synapse_attention_ref(q, keys, values, valid):
+    """q: [B,H,D]; keys/values: [B,T,Hkv,D]; valid: [B,T] bool."""
+    B, H, D = q.shape
+    Hkv = keys.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    k = keys.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k) / np.sqrt(D)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    mass = p.sum(axis=(1, 2))
+    return out.reshape(B, H, D).astype(q.dtype), mass
+
+
+def landmark_score_ref(q, keys, landmarks):
+    """q: [B,H,D]; keys: [B,T,Hkv,D]; landmarks: [B,Kc,D] pooled centroids."""
+    B, H, D = q.shape
+    Hkv = keys.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    k = keys.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k) / np.sqrt(D)
+    logits = logits.reshape(B, H, -1)
+    pooled = k.mean(axis=2)  # [B,T,D]
+    diff = pooled[:, :, None, :] - landmarks.astype(jnp.float32)[:, None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [B,T,Kc]
+    dist = jnp.sqrt(jnp.min(d2, axis=-1) / D)
+    return logits, dist
+
+
+def mamba2_chunk_ref(x, a_log_decay, b, c, *, chunk: int):
+    """Reference chunked-SSD core (used by the mamba2_chunk kernel tests).
+
+    x: [B,S,nh,dh] (dt-scaled inputs), a_log_decay: [B,S,nh] (log a_t, <=0),
+    b, c: [B,S,ds]. Returns y [B,S,nh,dh] (no D-skip/gating — core only).
+    """
+    B, S, nh, dh = x.shape
+    ds = b.shape[-1]
+    y = jnp.zeros((B, S, nh, dh), jnp.float32)
+    state = jnp.zeros((B, nh, dh, ds), jnp.float32)
+
+    def step(state, inp):
+        xt, la, bt, ct = inp
+        a = jnp.exp(la)  # [B,nh]
+        state = state * a[:, :, None, None] + jnp.einsum("bhd,bs->bhds", xt, bt)
+        yt = jnp.einsum("bhds,bs->bhd", state, ct)
+        return state, yt
+
+    xs = (
+        x.astype(jnp.float32).swapaxes(0, 1),
+        a_log_decay.astype(jnp.float32).swapaxes(0, 1),
+        b.astype(jnp.float32).swapaxes(0, 1),
+        c.astype(jnp.float32).swapaxes(0, 1),
+    )
+    _, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: single-token decode attention over a synapse token set.
+
+The per-tick hot loop of every Warp-Cortex agent: one query against the
+concatenated [landmarks; window; inject] key set (T = K + W + J, a few
+hundred to a few thousand — this is the whole point of the synapse). The
+kernel fuses the masked attend AND the paper's density statistic (attention
+mass per key, summed over heads) into one VMEM-resident pass, so the key set
+is read from HBM exactly once per step.
+
+Tiling: grid (B, Hkv); per program the full [T, D] K and V tiles for one kv
+head live in VMEM (T<=8192, D<=256 -> <=8 MiB bf16), queries are the G = H/Hkv
+group rows. Scores run in fp32 on the MXU; D and T should be multiples of
+128 for lane alignment (callers pad — see ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, mass_ref, *, scale: float):
+    # q_ref:    [G, D]      queries of this kv head's group
+    # k_ref:    [T, D]      keys (one kv head)
+    # v_ref:    [T, D]      values
+    # valid_ref:[T]         int8 mask
+    # o_ref:    [G, D]      attention output
+    # mass_ref: [T]         per-key probability mass summed over the G heads
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    valid = valid_ref[...] != 0
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [G, T]
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / denom  # [G, T]
+    o = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [G, D]
+    o_ref[...] = o.astype(o_ref.dtype)
+    mass_ref[...] = jnp.sum(p, axis=0).astype(mass_ref.dtype)
+
+
+def synapse_attention(q, keys, values, valid, *, scale: float | None = None, interpret: bool = False):
+    """q: [B, H, D]; keys/values: [B, T, Hkv, D]; valid: [B, T] bool.
+
+    Returns (out [B, H, D], mass [B, T] f32). T and D must be multiples of
+    128 (pad via ops.py wrapper).
+    """
+    B, H, D = q.shape
+    T, Hkv = keys.shape[1], keys.shape[2]
+    G = H // Hkv
+    scale = (1.0 / (D ** 0.5)) if scale is None else scale
+    qg = q.reshape(B, Hkv, G, D)
+    kt = keys.swapaxes(1, 2)  # [B, Hkv, T, D]
+    vt = values.swapaxes(1, 2)
+    valid8 = valid.astype(jnp.int8)
+
+    grid = (B, Hkv)
+    out, mass = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, G, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, T), lambda b, h: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, G, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T), lambda b, h: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, T), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, valid8)
+    return out.reshape(B, H, D), mass.sum(axis=1)

@@ -1,0 +1,343 @@
+"""Multi-pod dry-run: lower + compile every (arch x input shape) on the
+production meshes, record memory/cost analysis + collective bytes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+This is the ONLY entry point that forces 512 host devices (the two lines
+below run before any other import, per the multi-pod dry-run contract);
+smoke tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.core import synapse_sharded
+from repro.launch import sharding as shard_lib
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import abstract_train_state, make_train_step
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over all array shapes found in an HLO type string."""
+    total = 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its body lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        ls = line.rstrip()
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{\s*$", ls)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if ls.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(ls.strip())
+    return comps
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Collective output bytes with while-loop trip-count attribution.
+
+    Computations form a call graph; while-op bodies get multiplier =
+    caller_mult * trip_count, where the trip count is recovered from the
+    loop condition's comparison constant (scan loops always have one).
+    """
+    comps = _split_computations(hlo_text)
+
+    # per-computation: collectives, while-calls (body, cond), other calls
+    coll: dict[str, list[tuple[str, int]]] = {}
+    whiles: dict[str, list[tuple[str, str]]] = {}
+    calls: dict[str, list[str]] = {}
+    for name, lines in comps.items():
+        for ls in lines:
+            if "=" not in ls:
+                continue
+            rhs = ls.split("=", 1)[1]
+            for kind in _COLL_KINDS:
+                if re.search(rf"\b{kind}(?:-start)?\(", rhs):
+                    b = _shape_bytes(rhs.split(kind)[0])
+                    coll.setdefault(name, []).append((kind, b))
+                    break
+            wm = re.search(r"\bwhile\(.*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)", rhs)
+            if not wm:
+                wm2 = re.search(r"\bwhile\(.*?body=%?([\w.\-]+).*?condition=%?([\w.\-]+)", rhs)
+                if wm2:
+                    whiles.setdefault(name, []).append((wm2.group(1), wm2.group(2)))
+            else:
+                whiles.setdefault(name, []).append((wm.group(2), wm.group(1)))
+            for cm in re.finditer(r"(?:calls|to_apply|fusion)=%?([\w.\-]+)", rhs):
+                calls.setdefault(name, []).append(cm.group(1))
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for ls in comps.get(cond_name, []):
+            for c in re.finditer(r"constant\((\d+)\)", ls):
+                consts.append(int(c.group(1)))
+        return max(consts) if consts else 1
+
+    # propagate multipliers from ENTRY
+    entry = next((n for n in comps if "main" in n or n.startswith("entry")), None)
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n])) if comps else None
+    mult: dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if m <= mult.get(name, 0):
+            return
+        mult[name] = m
+        for body, cond in whiles.get(name, []):
+            visit(body, m * max(trip_count(cond), 1))
+            visit(cond, m)
+        for callee in calls.get(name, []):
+            visit(callee, m)
+
+    if entry:
+        visit(entry, 1)
+
+    per_kind: dict[str, int] = {}
+    total_once = 0
+    total = 0
+    for name, ops in coll.items():
+        m = mult.get(name, 1)
+        for kind, b in ops:
+            per_kind[kind] = per_kind.get(kind, 0) + b * m
+            total_once += b
+            total += b * m
+    return {"per_kind": per_kind, "total_bytes_once": total_once, "total_bytes": total}
+
+
+def while_trip_counts_from_config(cfg) -> int:
+    return cfg.n_layers
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, *, act_mode: str = "auto", fsdp_on: bool = True, synapse_token_shard: bool = True):
+    """Returns (fn, args, in_shardings, out_shardings, plan).
+
+    act_mode: "auto" -> sequence-parallel saves for full-seq kinds, batch-only
+    for decode; "batch" -> batch-only; "off" -> no activation constraints.
+    """
+    cfg = get_config(arch)
+    plan = specs_lib.plan_for(cfg, shape_name)
+    if plan.skip:
+        return None, None, None, None, plan
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if act_mode == "off":
+        model_lib.set_activation_sharding(None)
+    elif plan.kind == "decode" or act_mode == "batch":
+        model_lib.set_activation_sharding(P(dp, None, None))
+    else:
+        # sequence-parallel layer-boundary saves (Megatron-SP style)
+        model_lib.set_activation_sharding(P(dp, "model", None))
+    # flash-decode shard_map attend over token-sharded synapse buffers
+    synapse_sharded.set_shard_axis(
+        "model" if (plan.cache_kind == "synapse" and synapse_token_shard) else None,
+        mesh=mesh,
+    )
+
+    if plan.kind == "train":
+        state_abs = abstract_train_state(cfg)
+        batch_abs = specs_lib.train_batch_specs(cfg, plan.seq, plan.batch)
+        state_spec = shard_lib.param_specs(state_abs, cfg, mesh, fsdp_on=fsdp_on)
+        batch_spec = shard_lib.batch_specs(batch_abs, cfg, mesh)
+        opt_cfg = AdamWConfig()
+        step_fn = make_train_step(cfg, opt_cfg)
+        out_spec = (state_spec, jax.tree.map(lambda _: P(), {
+            "loss": 0, "ce": 0, "lb_loss": 0, "drop_frac": 0, "grad_norm": 0, "lr": 0}))
+        return step_fn, (state_abs, batch_abs), (state_spec, batch_spec), out_spec, plan
+
+    params_abs = model_lib.abstract_params(cfg)
+    params_spec = shard_lib.param_specs(params_abs, cfg, mesh, fsdp_on=fsdp_on)
+
+    if plan.kind == "prefill":
+        inputs_abs, cache_spec = specs_lib.input_specs(cfg, plan)
+        inputs_spec = shard_lib.batch_specs(inputs_abs, cfg, mesh)
+        if cfg.is_encoder_only:
+            fn = lambda p, i: model_lib.forward(p, cfg, i)
+            out = (params_spec, inputs_spec)
+            return fn, (params_abs, inputs_abs), out, (P(), {"lb_loss": P(), "drop_frac": P(), "hidden_last": P()}), plan
+        caches_abs = jax.eval_shape(lambda: model_lib.init_caches(cfg, plan.batch, cache_spec))
+        caches_spec = shard_lib.cache_specs(caches_abs, cfg, mesh, synapse_token_shard=synapse_token_shard)
+        fn = lambda p, i, c: model_lib.prefill(p, cfg, i, c, spec=cache_spec)
+        out_spec = (
+            shard_lib.fit_spec(mesh, (plan.batch, cfg.vocab_size), [dp, None]),
+            shard_lib.fit_spec(mesh, (plan.batch, cfg.d_model), [dp, None]),
+            caches_spec,
+        )  # logits, hidden, caches
+        return (
+            fn,
+            (params_abs, inputs_abs, caches_abs),
+            (params_spec, inputs_spec, caches_spec),
+            out_spec,
+            plan,
+        )
+
+    # decode
+    inputs_abs, cache_spec = specs_lib.input_specs(cfg, plan)
+    inputs_spec = shard_lib.batch_specs(inputs_abs, cfg, mesh)
+    caches_abs = jax.eval_shape(lambda: model_lib.init_caches(cfg, plan.batch, cache_spec))
+    caches_spec = shard_lib.cache_specs(caches_abs, cfg, mesh, synapse_token_shard=synapse_token_shard)
+    fn = lambda p, i, c: model_lib.decode_step(p, cfg, i, c, spec=cache_spec)
+    out_spec = (
+        shard_lib.fit_spec(mesh, (plan.batch, cfg.vocab_size), [dp, None]),
+        shard_lib.fit_spec(mesh, (plan.batch, cfg.d_model), [dp, None]),
+        caches_spec,
+    )  # logits, hidden, caches
+    return (
+        fn,
+        (params_abs, inputs_abs, caches_abs),
+        (params_spec, inputs_spec, caches_spec),
+        out_spec,
+        plan,
+    )
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str | None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        fn, args, in_specs, out_specs, plan = build_lowerable(arch, shape_name, mesh)
+        if plan.skip:
+            rec.update(status="SKIP", reason=plan.skip)
+            print(f"[dryrun] {arch} x {shape_name} on {mesh_name}: SKIP ({plan.skip})")
+            if out_dir:
+                os.makedirs(out_dir, exist_ok=True)
+                with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json"), "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+            return rec
+        with mesh:
+            in_sh = shard_lib.shardings_for(in_specs, mesh)
+            out_sh = shard_lib.shardings_for(out_specs, mesh)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        rec.update(
+            status="OK",
+            kind=plan.kind,
+            cache_kind=plan.cache_kind,
+            seq=plan.seq,
+            batch=plan.batch,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=_mem_dict(mem),
+            cost={k: v for k, v in (cost or {}).items() if isinstance(v, (int, float))},
+            collectives=coll,
+            hlo_bytes=len(hlo),
+        )
+        print(
+            f"[dryrun] {arch} x {shape_name} on {mesh_name}: OK "
+            f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+            f"argbytes/dev {rec['memory'].get('argument_size_in_bytes', 0)/1e9:.2f}GB, "
+            f"temp/dev {rec['memory'].get('temp_size_in_bytes', 0)/1e9:.2f}GB)"
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}", traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} x {shape_name} on {mesh_name}: FAIL {type(e).__name__}: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out and isinstance(mem, str):
+        out["raw"] = mem[:2000]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(specs_lib.SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    archs = [a for a in archs if a != "qwen2.5-0.5b" or args.arch == a]
+    shapes = list(specs_lib.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                combos.append((arch, shape, mp))
+
+    results = [run_one(a, s, multi_pod=mp, out_dir=args.out) for a, s, mp in combos]
+    ok = sum(r["status"] == "OK" for r in results)
+    skip = sum(r["status"] == "SKIP" for r in results)
+    fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n[dryrun] {ok} OK, {skip} SKIP, {fail} FAIL / {len(results)} combos")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

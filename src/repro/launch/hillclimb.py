@@ -1,0 +1,112 @@
+"""§Perf hillclimb driver: named variants per chosen pair, each re-lowered
+and re-analyzed; results land in benchmarks/artifacts/hillclimb/.
+
+The three chosen pairs (from the baseline roofline census):
+  * qwen3-moe-30b-a3b x train_4k — worst roofline fraction (memory term 68x
+    the compute term): the global MoE dispatch sort is SPMD-unshardable.
+  * qwen1.5-110b x train_4k — most collective-bound (40s X vs 17s C):
+    fp32 master weights are all-gathered, remat re-gathers in bwd.
+  * qwen3-8b x long_500k — most representative of the paper's technique
+    (synapse decode): per-token FSDP weight gathers dwarf the tiny synapse
+    cache traffic.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --pair moe|dense110|synapse
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+import argparse
+import dataclasses
+
+from repro.launch.roofline import analyze_pair
+
+OUT = "benchmarks/artifacts/hillclimb"
+
+
+def _cfgmod(**kw):
+    return lambda cfg: dataclasses.replace(cfg, **kw)
+
+
+# variant name -> (cfg_transform, fsdp_on)
+CAMPAIGNS = {
+    # ---- worst roofline fraction: MoE train ----
+    "moe": (
+        "qwen3-moe-30b-a3b",
+        "train_4k",
+        [
+            ("baseline_global_dispatch", _cfgmod(moe_dispatch="global"), True),
+            ("per_lane_dispatch", _cfgmod(moe_dispatch="per_lane"), True),
+            ("per_lane+bf16_params", _cfgmod(moe_dispatch="per_lane", param_dtype="bfloat16"), True),
+            ("per_lane+bf16+dots", _cfgmod(moe_dispatch="per_lane", param_dtype="bfloat16", remat_policy="dots"), True),
+            # per-lane dispatch + batch-only activations: lane gathers stay
+            # local (no seq-parallel all-gather of x inside the dispatch)
+            ("per_lane+act_batch", _cfgmod(moe_dispatch="per_lane"), True, True, "batch"),
+            ("per_lane+ep_pin+act_batch", _cfgmod(moe_dispatch="per_lane"), True, True, "batch"),
+            ("global+act_batch", _cfgmod(moe_dispatch="global"), True, True, "batch"),
+        ],
+    ),
+    # ---- most collective-bound: 110B dense train ----
+    "dense110": (
+        "qwen1.5-110b",
+        "train_4k",
+        [
+            ("baseline_f32_master", None, True),
+            ("bf16_params", _cfgmod(param_dtype="bfloat16"), True),
+            ("bf16+remat_dots", _cfgmod(param_dtype="bfloat16", remat_policy="dots"), True),
+            # act_mode batch: no sequence-parallel saves -> no per-layer
+            # activation all-gathers (memory for collectives trade)
+            ("act_batch_only", None, True, True, "batch"),
+        ],
+    ),
+    # ---- paper's technique: synapse long-context decode ----
+    "synapse": (
+        "qwen3-8b",
+        "long_500k",
+        [
+            ("baseline_fsdp_weights", None, True, True),
+            ("tp_weights", None, False, True),
+            ("tp_weights+bf16", _cfgmod(param_dtype="bfloat16"), False, True),
+            ("replicated_synapse", None, True, False),
+            ("replicated_synapse+tp+bf16", _cfgmod(param_dtype="bfloat16"), False, False),
+            # onehot writes + shard_map flash-decode attend (synapse sharded)
+            ("flashdecode_shardmap", None, True, True),
+            ("flashdecode+bf16", _cfgmod(param_dtype="bfloat16"), True, True),
+        ],
+    ),
+    # decode_32k sanity campaign (extra, cheap)
+    "decode32": (
+        "qwen3-8b",
+        "decode_32k",
+        [
+            ("baseline_fsdp_weights", None, True),
+            ("tp_weights", None, False),
+        ],
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=list(CAMPAIGNS))
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    arch, shape, variants = CAMPAIGNS[args.pair]
+    for v in variants:
+        name, transform, fsdp_on = v[0], v[1], v[2]
+        syn_shard = v[3] if len(v) > 3 else True
+        act_mode = v[4] if len(v) > 4 else "auto"
+        if args.variant and name != args.variant:
+            continue
+        analyze_pair(
+            arch, shape, OUT, cfg_transform=transform, fsdp_on=fsdp_on,
+            synapse_token_shard=syn_shard, act_mode=act_mode, variant=name,
+        )
+
+
+if __name__ == "__main__":
+    main()

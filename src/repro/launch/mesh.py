@@ -1,0 +1,33 @@
+"""Production meshes (v5e): single-pod 16x16 and 2-pod 2x16x16.
+
+A function, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+# hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12   # per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small host-device mesh for sharding unit tests (needs
+    --xla_force_host_platform_device_count >= n_data*n_model)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,101 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts produced by launch/dryrun.py and launch/roofline.py.
+
+    PYTHONPATH=src python -m repro.launch.report > /tmp/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = "benchmarks/artifacts/dryrun"
+ROOFLINE_DIR = "benchmarks/artifacts/roofline"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(dirname):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fix_hint(rec) -> str:
+    dom = rec["dominant"]
+    kind = rec["kind"]
+    if dom == "collective":
+        if kind == "train":
+            return "overlap FSDP all-gathers with layer compute / shrink seq-parallel gathers"
+        return "replicate weights over data axis (kill per-step FSDP gathers) or widen TP"
+    if dom == "memory":
+        if kind == "decode":
+            return "cache is the traffic: shrink KV (synapse/MLA) or widen batch to amortize weights"
+        return "bigger per-chip batch or fuse ops to cut re-read traffic"
+    return "compute-bound: at roofline; gains only from sparsity/quantization"
+
+
+def dryrun_tables() -> str:
+    recs = _load(DRYRUN_DIR)
+    out = ["### Dry-run matrix (lower + compile)\n"]
+    for mesh in ("16x16", "2x16x16"):
+        rows = [r for r in recs if r.get("mesh") == mesh]
+        if not rows:
+            continue
+        chips = 256 if mesh == "16x16" else 512
+        out.append(f"\n**Mesh {mesh} ({chips} chips)** — {sum(r['status']=='OK' for r in rows)} OK, "
+                   f"{sum(r['status']=='SKIP' for r in rows)} SKIP, "
+                   f"{sum(r['status']=='FAIL' for r in rows)} FAIL\n")
+        out.append("| arch | shape | status | kind | cache | args/dev GB | temp/dev GB | coll GB/step | compile s |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        key = lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))
+        for r in sorted(rows, key=key):
+            if r["status"] == "SKIP":
+                out.append(f"| {r['arch']} | {r['shape']} | SKIP — {r['reason'][:40]} | | | | | | |")
+                continue
+            if r["status"] == "FAIL":
+                out.append(f"| {r['arch']} | {r['shape']} | FAIL {r.get('error','')[:40]} | | | | | | |")
+                continue
+            mem = r["memory"]
+            coll = r["collectives"]["total_bytes"] / 1e9
+            out.append(
+                f"| {r['arch']} | {r['shape']} | OK | {r['kind']} | {r.get('cache_kind','')} "
+                f"| {mem.get('argument_size_in_bytes',0)/1e9:.2f} "
+                f"| {mem.get('temp_size_in_bytes',0)/1e9:.2f} "
+                f"| {coll:.2f} | {r.get('compile_s',0):.0f} |"
+            )
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    recs = [r for r in _load(ROOFLINE_DIR) if r.get("status") == "OK"]
+    out = [
+        "### Roofline (single-pod 16x16, 256 chips; v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n",
+        "| arch | shape | compute ms | memory ms | collective ms | dominant | useful FLOPs ratio | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    key = lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))
+    for r in sorted(recs, key=key):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {_fix_hint(r)} |"
+        )
+    doms = {}
+    for r in recs:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    out.append(f"\nDominant-term census: {doms}\n")
+    return "\n".join(out)
+
+
+def main():
+    print(dryrun_tables())
+    print()
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

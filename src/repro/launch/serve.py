@@ -1,0 +1,57 @@
+"""Serving launcher: plain continuous-batching server or the Warp-Cortex
+multi-agent engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-0.5b --mode cortex
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --mode batch
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.core.engine import CortexEngine
+from repro.core.prism import Prism
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import model as model_lib
+from repro.serving.sampler import SamplingParams
+from repro.serving.server import BatchServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-0.5b", choices=list_archs())
+    ap.add_argument("--mode", default="cortex", choices=["cortex", "batch"])
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--prompt", default="Question: what makes this system scale? [TASK: verify memory math] Answer:")
+    ap.add_argument("--ticks", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    tok = ByteTokenizer(cfg.vocab_size)
+
+    if args.mode == "batch":
+        server = BatchServer(params, cfg, tok, n_lanes=4, capacity=512,
+                             sampling=SamplingParams(temperature=0.9))
+        server.submit(args.prompt, max_new_tokens=32)
+        for r in server.run_until_done():
+            print(f"[{r.rid}] {r.text!r}")
+        return
+
+    prism = Prism(params, cfg)
+    engine = CortexEngine(prism, tok, n_main=1, max_side=4, main_capacity=512,
+                          side_max_steps=12, theta=-1.0,
+                          sampling=SamplingParams(temperature=1.0))
+    engine.submit(args.prompt)
+    engine.run(args.ticks)
+    print("events:", *engine.history, sep="\n  ")
+    rep = engine.memory_report()
+    print(f"memory: weights {rep['weight_bytes']/1e6:.1f}MB shared across "
+          f"{rep['n_agents']} agents; ctx/agent {rep['context_bytes_per_agent']/1e6:.2f}MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 100 --seq 256 --batch 16 [--mesh debug|single|multi]
+
+On this CPU container use the default --mesh debug (1 device) or reduced
+configs; the single/multi meshes are the production targets (the dry-run
+proves they lower+compile; real runs need the hardware).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--mesh", default="debug", choices=["debug", "single", "multi"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    if args.mesh != "debug":
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+        ).strip()
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.checkpoint import io as ckpt
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.launch import sharding as shard_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as model_lib
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.trainer import init_train_state, make_train_step
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1), total_steps=args.steps)
+    step_fn = make_train_step(cfg, opt)
+
+    if args.mesh == "debug":
+        step = jax.jit(step_fn)
+        state = init_train_state(jax.random.key(0), cfg)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        model_lib.set_activation_sharding(P(dp, "model", None))
+        state = init_train_state(jax.random.key(0), cfg)
+        state_spec = shard_lib.param_specs(state, cfg, mesh)
+        with mesh:
+            state = jax.device_put(state, shard_lib.shardings_for(state_spec, mesh))
+            step = jax.jit(
+                step_fn,
+                in_shardings=(shard_lib.shardings_for(state_spec, mesh), None),
+                out_shardings=(shard_lib.shardings_for(state_spec, mesh), None),
+            )
+
+    for i in range(args.steps):
+        batch = {
+            k: jnp.asarray(v)
+            for k, v in make_batch(cfg, DataConfig(seq_len=args.seq, batch_size=args.batch, seed=i)).items()
+        }
+        state, m = step(state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss {float(m['loss']):.4f}  lr {float(m['lr']):.3e}")
+        if args.ckpt_every and i and i % args.ckpt_every == 0:
+            ckpt.save(os.path.join(args.ckpt_dir, f"step{i}.msgpack.zst"), state.params)
+
+
+if __name__ == "__main__":
+    main()

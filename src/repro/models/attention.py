@@ -1,0 +1,188 @@
+"""GQA attention: training/prefill (blocked) and decode (full & synapse caches).
+
+Covers the assigned-architecture feature matrix:
+  * grouped-query attention (any n_kv_heads | MHA when n_kv == n_heads)
+  * qk_norm (qwen3), qkv bias (qwen1.5), RoPE / M-RoPE (qwen2-vl) / none (hubert)
+  * bidirectional (encoder-only) and causal masks
+  * per-invocation LoRA on the qkv projection (zamba2 shared block)
+
+Decode paths return per-key attention mass (summed over heads) — the paper's
+"Attention Score Summation" inverse-kernel-density term (§3.3) — so the
+synapse policy can accumulate scores without a second pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cache as cache_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+SCORE_EMA = 0.99  # decay of the per-slot attention-mass accumulator
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig, dtype, n_lora: int = 0):
+    """n_lora > 0 adds stacked per-invocation LoRA adapters on fused qkv."""
+    kq, kk, kv, ko, kl = jax.random.split(key, 5)
+    h, hkv, d, dm = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    p = {
+        "wq": dense_init(kq, dm, h * d, dtype),
+        "wk": dense_init(kk, dm, hkv * d, dtype),
+        "wv": dense_init(kv, dm, hkv * d, dtype),
+        "wo": dense_init(ko, h * d, dm, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * d,), dtype)
+        p["bk"] = jnp.zeros((hkv * d,), dtype)
+        p["bv"] = jnp.zeros((hkv * d,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((d,), dtype)
+        p["k_norm"] = jnp.ones((d,), dtype)
+    if n_lora > 0:
+        r = cfg.shared_attn_lora_rank
+        out = (h + 2 * hkv) * d
+        ka, kb = jax.random.split(kl)
+        p["lora_a"] = (jax.random.normal(ka, (n_lora, dm, r)) / np.sqrt(dm)).astype(dtype)
+        p["lora_b"] = jnp.zeros((n_lora, r, out), dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, lora_idx=None):
+    """x: [B, S, dm] -> q [B,S,H,D], k/v [B,S,Hkv,D]."""
+    B, S, _ = x.shape
+    h, hkv, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if lora_idx is not None and "lora_a" in p:
+        a = p["lora_a"][lora_idx]
+        b = p["lora_b"][lora_idx]
+        delta = (x @ a) @ b  # [B, S, (h+2hkv)*d]
+        dq, dk, dv = jnp.split(delta, [h * d, (h + hkv) * d], axis=-1)
+        q, k, v = q + dq, k + dk, v + dv
+    q = q.reshape(B, S, h, d)
+    k = k.reshape(B, S, hkv, d)
+    v = v.reshape(B, S, hkv, d)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rotate(cfg: ModelConfig, x, positions):
+    if cfg.rope_kind == "none":
+        return x
+    if cfg.rope_kind == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# blocked full-sequence attention (training / prefill)
+# ---------------------------------------------------------------------------
+def blocked_attention(q, k, v, *, causal: bool, q_offset=0, chunk: int = 1024):
+    """[B,S,H,D] x [B,T,Hkv,D] -> [B,S,H,D], chunked over queries.
+
+    Peak memory is O(S_chunk * T) instead of O(S * T); on TPU the chunk loop
+    lowers to a fori over MXU matmuls (flash-style but XLA-level).
+    """
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    scale = 1.0 / np.sqrt(D)
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    n_chunks = (S + pad) // chunk
+    qg = qg.reshape(B, n_chunks, chunk, Hkv, G, D)
+    kpos = jnp.arange(T)
+
+    def one_chunk(c, qc):
+        # qc: [B, chunk, Hkv, G, D]
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qc, k).astype(jnp.float32) * scale
+        if causal:
+            qpos = q_offset + c * chunk + jnp.arange(chunk)
+            m = kpos[None, :] <= qpos[:, None]  # [chunk, T]
+            s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+
+    out = jax.lax.map(
+        jax.checkpoint(lambda args: one_chunk(*args)),  # flash-style: recompute scores in bwd
+        (jnp.arange(n_chunks), qg.swapaxes(0, 1)),
+    )
+    out = out.swapaxes(0, 1).reshape(B, S + pad, H, D)
+    return out[:, :S]
+
+
+def attention_forward(params, cfg: ModelConfig, x, positions, *, lora_idx=None, chunk=1024):
+    """Full-sequence forward. Returns (y, (k_rot, v)) for cache fill."""
+    q, k, v = _project_qkv(params, cfg, x, lora_idx)
+    q = _rotate(cfg, q, positions)
+    k = _rotate(cfg, k, positions)
+    out = blocked_attention(q, k, v, causal=cfg.causal, chunk=chunk)
+    B, S = x.shape[:2]
+    y = out.reshape(B, S, -1) @ params["wo"]
+    return y, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode: single-step attend over a key/value set
+# ---------------------------------------------------------------------------
+def decode_attend(q, keys, values, valid):
+    """q: [B,H,D]; keys/values: [B,T,Hkv,D]; valid: [B,T] bool.
+
+    Returns (out [B,H,D], key_mass [B,T] f32) where key_mass is attention
+    probability summed over all query heads — the paper's density term.
+    """
+    B, H, D = q.shape
+    Hkv = keys.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, keys).astype(jnp.float32) / np.sqrt(D)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(values.dtype), values)
+    key_mass = p.sum(axis=(1, 2))  # [B, T]
+    return out.reshape(B, H, D), key_mass
+
+
+def attention_decode_full(params, cfg: ModelConfig, x, cache: cache_lib.FullCache, positions):
+    """One-token decode against a FullCache.
+
+    x: [B, 1, dm]; positions: [B] (rope index of the new token) or [B,3] mrope.
+    """
+    B = x.shape[0]
+    pos_q = positions[..., None] if cfg.rope_kind != "mrope" else positions[..., None]
+    q, k, v = _project_qkv(params, cfg, x)
+    if cfg.rope_kind == "mrope":
+        q = _rotate(cfg, q, positions[..., None])       # [B,3,1]
+        k = _rotate(cfg, k, positions[..., None])
+        pos_scalar = positions[:, 0]
+    else:
+        q = _rotate(cfg, q, pos_q)
+        k = _rotate(cfg, k, pos_q)
+        pos_scalar = positions
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]  # [B,H,D]/[B,Hkv,D]
+    lane = jnp.arange(B)
+    new_k = cache.k.at[lane, cache.length].set(k1)
+    new_v = cache.v.at[lane, cache.length].set(v1)
+    new_pos = cache.pos.at[lane, cache.length].set(pos_scalar)
+    slots = jnp.arange(cache.capacity)
+    valid = slots[None, :] <= cache.length[:, None]  # includes the token just written
+    out, key_mass = decode_attend(q1, new_k, new_v, valid)
+    y = out.reshape(B, -1) @ params["wo"]
+    new_score = cache.score.at[lane, cache.length].set(0.0)
+    new_score = new_score * SCORE_EMA + key_mass
+    new_cache = cache_lib.FullCache(new_k, new_v, new_pos, new_score, cache.length + 1)
+    return y[:, None, :], new_cache, key_mass

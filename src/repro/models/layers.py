@@ -1,0 +1,100 @@
+"""Primitive layers: norms, projections, rotary embeddings, MLPs.
+
+Pure functions over param pytrees. Params are plain nested dicts of
+jnp arrays; initializers take an explicit PRNG key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rms_norm_init(d: int, dtype):
+    return jnp.ones((d,), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float):
+    """Inverse frequencies [d_head//2]."""
+    return 1.0 / (theta ** (np.arange(0, d_head, 2).astype(np.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+    ang = ang[..., None, :]  # broadcast over heads: [..., S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections: tuple[int, int, int]):
+    """Multimodal RoPE (Qwen2-VL §3): positions [..., 3, S] for (t, h, w).
+
+    The head dim's frequency bands are partitioned into `sections` (halved
+    dims: sum(sections) == d_head // 2); each band rotates by its own
+    positional axis. For pure-text input all three axes carry the same index
+    and this reduces to standard RoPE.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = jnp.asarray(rope_freqs(d, theta))  # [D/2]
+    # ang[axis]: [..., S, D/2]
+    ang_all = positions[..., :, :, None].astype(jnp.float32) * inv  # [..., 3, S, D/2]
+    sel = np.zeros((3, d // 2), np.float32)
+    start = 0
+    for axis, sec in enumerate(sections):
+        sel[axis, start : start + sec] = 1.0
+        start += sec
+    ang = jnp.einsum("...tsd,td->...sd", ang_all, jnp.asarray(sel))
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu_init(key, d_model: int, d_ff: int, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(kg, d_model, d_ff, dtype),
+        "up": dense_init(ku, d_model, d_ff, dtype),
+        "down": dense_init(kd, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x):
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]

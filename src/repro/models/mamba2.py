@@ -1,0 +1,141 @@
+"""Mamba2 (SSD) mixer — chunked parallel training form + O(1) decode step.
+
+Used by zamba2 (hybrid). The chunked state-space-dual algorithm expresses the
+selective scan as blocked matmuls (TPU/MXU-friendly): within-chunk quadratic
+attention-like term + cross-chunk recurrence over chunk states.
+
+Recurrence (per head h, scalar decay):
+    H_t = a_t * H_{t-1} + (dt_t x_t) ⊗ B_t        a_t = exp(dt_t * A_h)
+    y_t = C_t · H_t + D_h * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    dm, di, ds, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state_size, cfg.ssm_n_heads
+    d_conv_ch = di + 2 * ds
+    return {
+        # in_proj -> [z (di), xBC (di + 2ds), dt (nh)]
+        "w_in": dense_init(ks[0], dm, 2 * di + 2 * ds + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, d_conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_conv_ch,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[2], di, dm, dtype),
+    }
+
+
+def _split_in(cfg: ModelConfig, zxbcdt):
+    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state_size, cfg.ssm_n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds :]
+    return z, xbc, dt
+
+
+def mamba2_forward(p, cfg: ModelConfig, x, return_state: bool = False):
+    """Full-sequence chunked SSD. x: [B,S,dm] -> y [B,S,dm] (+ terminal state)."""
+    B, S, _ = x.shape
+    di, ds, nh, dh = cfg.ssm_d_inner, cfg.ssm_state_size, cfg.ssm_n_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+
+    zxbcdt = x @ p["w_in"]
+    z, xbc, dt = _split_in(cfg, zxbcdt)
+    # causal depthwise conv (width W)
+    W = cfg.ssm_conv_width
+    padded = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(
+        padded[:, i : i + S, :] * p["conv_w"][i][None, None, :] for i in range(W)
+    ) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+    xs = xbc[..., :di].reshape(B, S, nh, dh)
+    Bm = xbc[..., di : di + ds]       # [B,S,ds]
+    Cm = xbc[..., di + ds :]          # [B,S,ds]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    A = -jnp.exp(p["a_log"])                                      # [nh]
+    la = (dt * A).reshape(B, nC, Q, nh)                           # log decay per step
+    cum = jnp.cumsum(la, axis=2)                                  # Λ_i
+    X = (xs.astype(jnp.float32) * dt[..., None]).reshape(B, nC, Q, nh, dh)
+    Bc = Bm.astype(jnp.float32).reshape(B, nC, Q, ds)
+    Cc = Cm.astype(jnp.float32).reshape(B, nC, Q, ds)
+
+    # ---- intra-chunk: Y[i] = Σ_{j<=i} exp(Λ_i-Λ_j) (C_i·B_j) X_j ----
+    G = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)  # [B,nC,Q,Q]
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # Λ_i - Λ_j: [B,nC,Q,Q,nh]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask[None, None, :, :, None], jnp.exp(dec), 0.0) * G[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", M, X)
+
+    # ---- chunk states: S_c = Σ_j exp(Λ_Q - Λ_j) B_j ⊗ X_j ----
+    tail_dec = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nC,Q,nh]
+    chunk_state = jnp.einsum("bcjh,bcjs,bcjhd->bchds", tail_dec, Bc, X)  # [B,nC,nh,dh,ds]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nC,nh] total decay of a chunk
+
+    # ---- inter-chunk scan over chunk states ----
+    def scan_fn(carry, inp):
+        st, dcy = inp  # [B,nh,dh,ds], [B,nh]
+        new = carry * dcy[:, :, None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((B, nh, dh, ds), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init, (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # [B,nC,nh,dh,ds] state at chunk start
+    y_inter = jnp.einsum(
+        "bcis,bcih,bchds->bcihd", Cc, jnp.exp(cum), prev_states
+    )
+
+    y = (y_intra + y_inter).reshape(B, S, nh, dh) + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if not return_state:
+        return out
+    # terminal decode state: final SSD state + raw (pre-conv) input tail
+    raw_xbc = _split_in(cfg, zxbcdt)[1]
+    conv_tail = raw_xbc[:, S - (W - 1) :, :] if W > 1 else raw_xbc[:, :0, :]
+    state = cache_lib.Mamba2State(conv=conv_tail.astype(x.dtype), ssm=final_state)
+    return out, state
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, state: cache_lib.Mamba2State):
+    """Single-token step. x: [B,1,dm]."""
+    B = x.shape[0]
+    di, ds, nh, dh = cfg.ssm_d_inner, cfg.ssm_state_size, cfg.ssm_n_heads, cfg.ssm_head_dim
+    zxbcdt = x[:, 0] @ p["w_in"]
+    z, xbc, dt = _split_in(cfg, zxbcdt[:, None, :])
+    z, xbc, dt = z[:, 0], xbc[:, 0], dt[:, 0]
+    # conv over [tail, new]
+    W = cfg.ssm_conv_width
+    window = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)  # [B, W, ch]
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc_a = jax.nn.silu(conv)
+    xs = xbc_a[:, :di].reshape(B, nh, dh)
+    Bm = xbc_a[:, di : di + ds]
+    Cm = xbc_a[:, di + ds :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    a = jnp.exp(dt * (-jnp.exp(p["a_log"])))  # [B,nh]
+    X = xs.astype(jnp.float32) * dt[..., None]  # [B,nh,dh]
+    new_ssm = state.ssm * a[:, :, None, None] + jnp.einsum("bhd,bs->bhds", X, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhds,bs->bhd", new_ssm, Cm.astype(jnp.float32)) + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(B, di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None, :]
+    new_state = cache_lib.Mamba2State(conv=window[:, 1:, :].astype(state.conv.dtype), ssm=new_ssm)
+    return out, new_state

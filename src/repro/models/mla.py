@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+The KV cache stores only the latent ``c_kv`` (kv_lora_rank) plus one shared
+rope key per token — this is itself a KV compression, and the Warp-Cortex
+synapse composes with it: landmark selection runs directly on the latent
+point cloud (see DESIGN.md §4).
+
+Decode uses the *absorbed* form: W_uk is folded into the query and W_uv into
+the output so attention works in latent space — O(r) per cached token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cache as cache_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    dm, h = cfg.d_model, cfg.n_heads
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    p = {}
+    qdim = h * (dn + dr)
+    if cfg.q_lora_rank:
+        p["wdq"] = dense_init(ks[0], dm, cfg.q_lora_rank, dtype)
+        p["q_lora_norm"] = jnp.ones((cfg.q_lora_rank,), dtype)
+        p["wuq"] = dense_init(ks[1], cfg.q_lora_rank, qdim, dtype)
+    else:
+        p["wq"] = dense_init(ks[1], dm, qdim, dtype)
+    p["wdkv"] = dense_init(ks[2], dm, r + dr, dtype)
+    p["kv_norm"] = jnp.ones((r,), dtype)
+    p["wuk"] = dense_init(ks[3], r, h * dn, dtype)
+    p["wuv"] = dense_init(ks[4], r, h * dv, dtype)
+    p["wo"] = dense_init(ks[5], h * dv, dm, dtype)
+    return p
+
+
+def _queries(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm(x @ p["wdq"], p["q_lora_norm"], cfg.norm_eps)
+        q = cq @ p["wuq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, h, dn + dr)
+    return q[..., :dn], q[..., dn:]  # q_nope [B,S,h,dn], q_rope [B,S,h,dr]
+
+
+def _latents(p, cfg: ModelConfig, x, positions):
+    ckv_full = x @ p["wdkv"]
+    ckv, krope = ckv_full[..., : cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank :]
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, krope  # [B,S,r], [B,S,dr]
+
+
+def mla_forward(p, cfg: ModelConfig, x, positions, *, chunk: int = 1024):
+    """Training/prefill: materialized keys/values, blocked over queries."""
+    B, S, _ = x.shape
+    h, dn, dv, dr = cfg.n_heads, cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.qk_rope_head_dim
+    qn, qr = _queries(p, cfg, x)
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    ckv, krope = _latents(p, cfg, x, positions)
+    kn = (ckv @ p["wuk"]).reshape(B, S, h, dn)
+    v = (ckv @ p["wuv"]).reshape(B, S, h, dv)
+    scale = 1.0 / np.sqrt(dn + dr)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    qn_p = jnp.pad(qn, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else qn
+    qr_p = jnp.pad(qr, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else qr
+    n_chunks = (S + pad) // chunk
+    qn_c = qn_p.reshape(B, n_chunks, chunk, h, dn).swapaxes(0, 1)
+    qr_c = qr_p.reshape(B, n_chunks, chunk, h, dr).swapaxes(0, 1)
+    kpos = jnp.arange(S)
+
+    def one_chunk(args):
+        c, qnc, qrc = args
+        s = jnp.einsum("bqhd,bthd->bhqt", qnc, kn) + jnp.einsum("bqhd,btd->bhqt", qrc, krope)
+        s = s.astype(jnp.float32) * scale
+        qpos = c * chunk + jnp.arange(chunk)
+        s = jnp.where((kpos[None, :] <= qpos[:, None])[None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqt,bthd->bqhd", pr, v)
+
+    out = jax.lax.map(jax.checkpoint(one_chunk), (jnp.arange(n_chunks), qn_c, qr_c))
+    out = out.swapaxes(0, 1).reshape(B, S + pad, h, dv)[:, :S]
+    y = out.reshape(B, S, h * dv) @ p["wo"]
+    return y, (ckv, krope)
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache: cache_lib.MLACache, positions):
+    """Absorbed-form single-token decode. x: [B,1,dm], positions: [B]."""
+    B = x.shape[0]
+    h, dn, dv, dr, r = (
+        cfg.n_heads,
+        cfg.qk_nope_head_dim,
+        cfg.v_head_dim,
+        cfg.qk_rope_head_dim,
+        cfg.kv_lora_rank,
+    )
+    qn, qr = _queries(p, cfg, x)
+    qr = apply_rope(qr, positions[:, None], cfg.rope_theta)
+    ckv_new, krope_new = _latents(p, cfg, x, positions[:, None])
+    lane = jnp.arange(B)
+    ckv_c = cache.ckv.at[lane, cache.length].set(ckv_new[:, 0])
+    krope_c = cache.krope.at[lane, cache.length].set(krope_new[:, 0])
+    # absorb W_uk into q:  q_lat[b,h,r] = sum_dn qn[b,h,dn] * Wuk[r, h, dn]
+    wuk = p["wuk"].reshape(r, h, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", qn[:, 0], wuk)
+    s = jnp.einsum("bhr,btr->bht", q_lat, ckv_c) + jnp.einsum(
+        "bhd,btd->bht", qr[:, 0], krope_c
+    )
+    s = s.astype(jnp.float32) / np.sqrt(dn + dr)
+    slots = jnp.arange(cache.capacity)
+    valid = slots[None, :] <= cache.length[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    key_mass = pr.sum(axis=1)  # [B, T] — density term for the synapse
+    out_lat = jnp.einsum("bht,btr->bhr", pr.astype(ckv_c.dtype), ckv_c)
+    wuv = p["wuv"].reshape(r, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat, wuv)
+    y = out.reshape(B, h * dv) @ p["wo"]
+    new_score = cache.score.at[lane, cache.length].set(0.0) * 0.99 + key_mass
+    new_cache = cache_lib.MLACache(ckv_c, krope_c, new_score, cache.length + 1)
+    return y[:, None, :], new_cache, key_mass

@@ -1,0 +1,197 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch.
+
+Dispatch strategy (see DESIGN.md): tokens are flattened, argsorted by their
+assigned expert, and scattered into a static ``[E, C, d]`` buffer (capacity
+C = tokens * top_k / E * capacity_factor; overflow drops, counted for the
+aux metrics). Expert matmuls are then plain batched GEMMs ``[E,C,d]x[E,d,f]``
+which shard cleanly over the ``model`` mesh axis (expert parallelism) under
+GSPMD — no [T, E, C] one-hot intermediate is ever materialized.
+
+Covers qwen3-moe (128e top-8, no shared) and deepseek-v2 (160e top-6 +
+2 shared experts, leading dense layer handled at the model level).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, swiglu, swiglu_init
+
+
+def _constrain_ep(x, expert_dim: int):
+    """Pin the expert dim of dispatch buffers to the model axis (expert
+    parallelism) — GSPMD otherwise gathers the expert weights per layer."""
+    from repro.models import model as model_lib  # lazy: no import cycle
+
+    spec = getattr(model_lib, "_ACT_SPEC", None)
+    if spec is None:
+        return x
+    import jax.sharding as jsh
+
+    axes = [None] * x.ndim
+    axes[0] = spec[0]          # batch axes
+    axes[expert_dim] = "model"
+    return jax.lax.with_sharding_constraint(x, jsh.PartitionSpec(*axes))
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    kr, ke, ks = jax.random.split(key, 3)
+    E, dm, dff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(ke, 3)
+    p = {
+        "router": dense_init(kr, dm, E, dtype, scale=0.02),
+        "experts": {
+            "gate": jax.vmap(lambda k: dense_init(k, dm, dff, dtype))(jax.random.split(keys[0], E)),
+            "up": jax.vmap(lambda k: dense_init(k, dm, dff, dtype))(jax.random.split(keys[1], E)),
+            "down": jax.vmap(lambda k: dense_init(k, dff, dm, dtype))(jax.random.split(keys[2], E)),
+        },
+    }
+    if cfg.n_shared_experts:
+        shared_ff = cfg.n_shared_experts * cfg.d_ff
+        p["shared"] = swiglu_init(ks, dm, shared_ff, dtype)
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.experts_per_token / cfg.n_experts * cfg.moe_capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_forward(p, cfg: ModelConfig, x):
+    """x: [B, S, dm] -> (y, aux) where aux has the load-balance loss terms.
+
+    Two dispatch strategies (cfg.moe_dispatch, see EXPERIMENTS.md §Perf):
+      * "per_lane": sort/scatter batched over the batch dim — every dispatch
+        op carries the sharded batch axis, so GSPMD keeps it distributed
+        (no replicated global sort). Default.
+      * "global": one flat sort over B*S*K assignments — statistically
+        smoother capacity, but the sort/gather is unshardable and SPMD
+        replicates it (measured 10x memory-term blowup on MoE train).
+    Decode (S == 1) always uses the global path (per-lane capacity would
+    degenerate).
+    """
+    B, S, dm = x.shape
+    if cfg.moe_dispatch == "per_lane" and S > 1:
+        return _moe_per_lane(p, cfg, x)
+    return _moe_global(p, cfg, x)
+
+
+def _moe_global(p, cfg: ModelConfig, x):
+    B, S, dm = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, dm)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- sort-based dispatch into [E, C, dm] ----
+    C = _capacity(cfg, T)
+    flat_e = expert_ids.reshape(T * K)
+    order = jnp.argsort(flat_e, stable=True)  # [T*K]
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)  # [E]
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * K) - starts[sorted_e]  # rank within expert
+    src_token = order // K
+
+    buf = jnp.zeros((E, C, dm), xt.dtype)
+    buf = buf.at[sorted_e, pos_in_e].set(xt[src_token].astype(buf.dtype), mode="drop")
+
+    # ---- batched expert GEMMs (shard over E) ----
+    ex = p["experts"]
+    cast = lambda a: a.astype(buf.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, cast(ex["gate"]))) * jnp.einsum(
+        "ecd,edf->ecf", buf, cast(ex["up"])
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, cast(ex["down"]))  # [E, C, dm]
+
+    # ---- gather back, weight, combine over K ----
+    gathered = out_buf[sorted_e, pos_in_e]  # [T*K, dm] (overflowed -> garbage)
+    kept = pos_in_e < C
+    gathered = jnp.where(kept[:, None], gathered, jnp.zeros((), gathered.dtype))
+    unsorted = jnp.zeros((T * K, dm), xt.dtype).at[order].set(gathered)
+    w = gate_vals.reshape(T * K).astype(xt.dtype)
+    y = (unsorted * w[:, None]).reshape(T, K, dm).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu(p["shared"], xt)
+
+    # ---- aux: switch-style load-balance loss + drop fraction ----
+    frac_tokens = jnp.mean(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=(0, 1)) * K
+    frac_probs = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(frac_tokens * frac_probs)
+    dropped = 1.0 - jnp.mean(kept.astype(jnp.float32))
+    aux = {"lb_loss": lb_loss, "drop_frac": dropped}
+    return y.reshape(B, S, dm), aux
+
+
+def _moe_per_lane(p, cfg: ModelConfig, x):
+    """Batched-over-lanes, GATHER-ONLY dispatch: [B, S, dm], per-lane capacity.
+
+    No scatter anywhere: after the per-lane sort, the [E, C] buffer is read
+    as contiguous slices of the sorted token stream (buf[e, c] =
+    x_sorted[starts[e] + c]), and the combine/unsort are take_along_axis.
+    Batched gathers over a batch-sharded dim partition cleanly under GSPMD;
+    batched scatters trigger involuntary full rematerialization
+    (EXPERIMENTS.md §Perf pair 3, iteration 2).
+    """
+    B, S, dm = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # [B,S,K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    N = S * K
+    C = max(8, -(-int(S * K / E * cfg.moe_capacity_factor) // 8) * 8)
+    flat_e = expert_ids.reshape(B, N)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)           # [B,N]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    counts = jax.vmap(lambda fe: jnp.bincount(fe, length=E))(flat_e)  # [B,E]
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    pos_sorted = jnp.arange(N)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=-1)
+    src_token = order // K                                       # [B,N]
+    x_sorted = jnp.take_along_axis(x, src_token[..., None], axis=1)  # [B,N,dm]
+
+    # gather-only buffer build: buf[b,e,c] = x_sorted[b, starts[b,e]+c]
+    slot_idx = starts[:, :, None] + jnp.arange(C)[None, None, :]          # [B,E,C]
+    slot_valid = jnp.arange(C)[None, None, :] < counts[:, :, None]
+    slot_idx = jnp.clip(slot_idx, 0, N - 1)
+    buf = jnp.take_along_axis(
+        x_sorted, slot_idx.reshape(B, E * C)[..., None], axis=1
+    ).reshape(B, E, C, dm)
+    buf = jnp.where(slot_valid[..., None], buf, jnp.zeros((), buf.dtype))
+    buf = _constrain_ep(buf, expert_dim=1)
+
+    ex = p["experts"]
+    cast = lambda a: a.astype(buf.dtype)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, cast(ex["gate"]))) * jnp.einsum(
+        "becd,edf->becf", buf, cast(ex["up"])
+    )
+    h = _constrain_ep(h, expert_dim=1)
+    out_buf = _constrain_ep(jnp.einsum("becf,efd->becd", h, cast(ex["down"])), expert_dim=1)
+
+    # combine: token n reads buf[sorted_e[n], pos_sorted[n]], then unsort
+    kept = pos_sorted < C
+    flat_pos = sorted_e * C + jnp.minimum(pos_sorted, C - 1)     # [B,N]
+    gathered = jnp.take_along_axis(
+        out_buf.reshape(B, E * C, dm), flat_pos[..., None], axis=1
+    )
+    gathered = jnp.where(kept[..., None], gathered, jnp.zeros((), gathered.dtype))
+    inv_order = jnp.argsort(order, axis=-1)
+    unsorted = jnp.take_along_axis(gathered, inv_order[..., None], axis=1)
+    w = gate_vals.reshape(B, N).astype(x.dtype)
+    y = (unsorted * w[..., None]).reshape(B, S, K, dm).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu(jax.tree.map(lambda a: a.astype(x.dtype), p["shared"]), x)
+
+    frac_tokens = jnp.mean(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=(0, 1, 2)) * K
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * frac_probs)
+    dropped = 1.0 - jnp.mean(kept.astype(jnp.float32))
+    return y, {"lb_loss": lb_loss, "drop_frac": dropped}

@@ -1,0 +1,156 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): data-dependent decay linear attention.
+
+Time-mix recurrence per head (k-dim x v-dim matrix state S):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with data-dependent per-channel decay w_t = exp(-exp(w0 + lora_w(x'_t))) and
+data-dependent token-shift interpolation (ddlerp) via low-rank adapters.
+
+Training runs the recurrence with lax.scan over time (fp32 state); decode is
+the O(1) single-step update. Attention-free: the Warp-Cortex synapse is
+inapplicable (state is already O(1)); referential injection is re-expressed
+as a state blend (core/injection.py) — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv6_tmix_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 12)
+    d, h, hs = cfg.d_model, cfg.rwkv_n_heads, cfg.rwkv_head_size
+    lm, ld = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    p = {
+        "mu_x": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dtype),
+        "mu": (jax.random.uniform(ks[1], (5, d)) * 0.5).astype(dtype),
+        "mix_a": (jax.random.normal(ks[2], (5, d, lm)) * 0.01).astype(dtype),
+        "mix_b": jnp.zeros((5, lm, d), dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": (jax.random.normal(ks[3], (d, ld)) * 0.01).astype(dtype),
+        "decay_b": jnp.zeros((ld, d), dtype),
+        "u": (jax.random.normal(ks[4], (h, hs)) * 0.1).astype(jnp.float32),
+        "wr": dense_init(ks[5], d, d, dtype),
+        "wk": dense_init(ks[6], d, d, dtype),
+        "wv": dense_init(ks[7], d, d, dtype),
+        "wg": dense_init(ks[8], d, d, dtype),
+        "wo": dense_init(ks[9], d, d, dtype),
+        "ln_x": jnp.ones((d,), dtype),  # per-head group norm scale
+    }
+    return p
+
+
+def rwkv6_cmix_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d, dff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dtype),
+        "mu_r": (jax.random.uniform(ks[1], (d,)) * 0.5).astype(dtype),
+        "wk": dense_init(ks[2], d, dff, dtype),
+        "wv": dense_init(ks[3], dff, d, dtype),
+        "wr": dense_init(ks[0], d, d, dtype),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift for the 5 mix targets. -> [5, B, S, d]."""
+    xx = x_prev - x
+    base = x + xx * p["mu_x"]
+    t = jnp.tanh(jnp.einsum("bsd,ndr->nbsr", base, p["mix_a"]))
+    lora = jnp.einsum("nbsr,nrd->nbsd", t, p["mix_b"])
+    mix = p["mu"][:, None, None, :] + lora  # [5,B,S,d]
+    return x[None] + xx[None] * mix
+
+
+def _group_norm(x, weight, h, eps=1e-5):
+    """Per-head layer norm over head_size. x: [..., d] viewed as [..., h, hs]."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], h, shp[-1] // h).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def _tmix_projections(p, cfg: ModelConfig, x, x_prev):
+    """Shared by forward and decode. x, x_prev: [B,S,d]."""
+    B, S, d = x.shape
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    mixed = _ddlerp(p, x, x_prev)
+    xw, xk, xv, xr, xg = mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]
+    r = (xr @ p["wr"]).reshape(B, S, h, hs)
+    k = (xk @ p["wk"]).reshape(B, S, h, hs)
+    v = (xv @ p["wv"]).reshape(B, S, h, hs)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = p["w0"] + jnp.einsum("bsr,rd->bsd", jnp.tanh(xw @ p["decay_a"]), p["decay_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw)).reshape(B, S, h, hs)  # decay in (0,1)
+    return r, k, v, g, w
+
+
+def rwkv6_tmix_forward(p, cfg: ModelConfig, x, shift_state=None, wkv_state=None):
+    """Full-sequence time-mix. x: [B,S,d]. Returns (y, new_states)."""
+    B, S, d = x.shape
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    prev = jnp.zeros((B, 1, d), x.dtype) if shift_state is None else shift_state[:, None, :]
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    r, k, v, g, w = _tmix_projections(p, cfg, x, x_prev)
+
+    S0 = jnp.zeros((B, h, hs, hs), jnp.float32) if wkv_state is None else wkv_state
+
+    def step(S_prev, inp):
+        rt, kt, vt, wt = inp  # [B,h,hs] each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+        out = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32), S_prev + p["u"][None, :, :, None] * kv)
+        S_new = S_prev * wt.astype(jnp.float32)[..., None] + kv
+        return S_new, out
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), w.swapaxes(0, 1))
+    S_fin, outs = jax.lax.scan(step, S0, xs)
+    y = outs.swapaxes(0, 1).reshape(B, S, d)
+    y = _group_norm(y, p["ln_x"], h)
+    y = (y * g) @ p["wo"]
+    return y, (x[:, -1, :], S_fin)
+
+
+def rwkv6_tmix_decode(p, cfg: ModelConfig, x, state: cache_lib.RWKV6State):
+    """Single token. x: [B,1,d]."""
+    B, _, d = x.shape
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    x_prev = state.shift_tm[:, None, :]
+    r, k, v, g, w = _tmix_projections(p, cfg, x, x_prev)
+    rt, kt, vt, wt = r[:, 0], k[:, 0], v[:, 0], w[:, 0]
+    kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+    out = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32), state.wkv + p["u"][None, :, :, None] * kv)
+    S_new = state.wkv * wt.astype(jnp.float32)[..., None] + kv
+    y = out.reshape(B, 1, d)
+    y = _group_norm(y, p["ln_x"], h)
+    y = (y * g) @ p["wo"]
+    return y, dataclasses_replace_rwkv(state, shift_tm=x[:, 0, :], wkv=S_new)
+
+
+def rwkv6_cmix_forward(p, cfg: ModelConfig, x, shift_state=None):
+    B, S, d = x.shape
+    prev = jnp.zeros((B, 1, d), x.dtype) if shift_state is None else shift_state[:, None, :]
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"]), x[:, -1, :]
+
+
+def rwkv6_cmix_decode(p, cfg: ModelConfig, x, state: cache_lib.RWKV6State):
+    y, last = rwkv6_cmix_forward(p, cfg, x, state.shift_cm)
+    return y, dataclasses_replace_rwkv(state, shift_cm=last)
+
+
+def dataclasses_replace_rwkv(state: cache_lib.RWKV6State, **kw) -> cache_lib.RWKV6State:
+    import dataclasses
+
+    return dataclasses.replace(state, **kw)

@@ -1,0 +1,120 @@
+"""Continuous-batching single-model server (no multi-agent logic).
+
+The plain-serving baseline the paper compares against: N requests = N full
+KV caches. Lanes are recycled as requests finish; prefill is per-admission,
+decode is one fused batched step per tick. The CortexEngine (core/engine.py)
+is the Warp-Cortex counterpart with shared weights + synapse sides.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.serving.sampler import SamplingParams, sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: str
+    max_new_tokens: int = 64
+    tokens: list = field(default_factory=list)
+    text: str = ""
+    done: bool = False
+    lane: int = -1
+
+
+class BatchServer:
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        tokenizer: ByteTokenizer,
+        *,
+        n_lanes: int = 8,
+        capacity: int = 1024,
+        sampling: SamplingParams = SamplingParams(temperature=0.8),
+        cache_kind: str = "full",
+        seed: int = 0,
+    ):
+        self.params, self.cfg, self.tok = params, cfg, tokenizer
+        self.sampling = sampling
+        self.spec = model_lib.CacheSpec(kind=cache_kind, capacity=capacity)
+        self.caches = model_lib.init_caches(cfg, n_lanes, self.spec)
+        self.n_lanes = n_lanes
+        self.lanes: list[Request | None] = [None] * n_lanes
+        self.positions = np.zeros(n_lanes, np.int64)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._key = jax.random.key(seed)
+        self._rid = 0
+
+        self._jit_prefill = jax.jit(
+            lambda p, toks, c: model_lib.prefill(p, cfg, {"tokens": toks}, c, spec=self.spec)
+        )
+        self._jit_decode = jax.jit(
+            lambda p, toks, pos, c: model_lib.decode_step(
+                p, cfg, {"tokens": toks, "positions": pos}, c, spec=self.spec
+            )
+        )
+
+    def submit(self, prompt: str, max_new_tokens: int = 64) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, prompt, max_new_tokens))
+        return self._rid
+
+    def _admit(self):
+        for lane in range(self.n_lanes):
+            if self.lanes[lane] is None and self.queue:
+                req = self.queue.pop(0)
+                ids = self.tok.encode(req.prompt, bos=True)
+                lane_cache = jax.tree.map(lambda a: a[:, lane : lane + 1], self.caches)
+                # reset the lane
+                lane_cache = jax.tree.map(lambda a: jnp.zeros_like(a), lane_cache)
+                _, _, lane_cache = self._jit_prefill(
+                    self.params, jnp.asarray([ids], jnp.int32), lane_cache
+                )
+                self.caches = jax.tree.map(
+                    lambda full, part: full.at[:, lane : lane + 1].set(part), self.caches, lane_cache
+                )
+                req.tokens = list(ids)
+                req.lane = lane
+                self.positions[lane] = len(ids)
+                self.lanes[lane] = req
+
+    def tick(self):
+        self._admit()
+        if not any(self.lanes):
+            return
+        toks = jnp.asarray(
+            [r.tokens[-1] if r else 0 for r in self.lanes], jnp.int32
+        )
+        pos = jnp.asarray(self.positions, jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        logits, _, self.caches = self._jit_decode(self.params, toks, pos, self.caches)
+        new = np.asarray(sample(k, logits, self.sampling))
+        for lane, req in enumerate(self.lanes):
+            if req is None:
+                continue
+            t = int(new[lane])
+            req.tokens.append(t)
+            req.text += self.tok.decode([t])
+            self.positions[lane] += 1
+            gen = len(req.tokens) - len(self.tok.encode(req.prompt, bos=True))
+            if t == self.tok.eos_id or gen >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.lanes[lane] = None
+
+    def run_until_done(self, max_ticks: int = 4096):
+        for _ in range(max_ticks):
+            if not self.queue and not any(self.lanes):
+                break
+            self.tick()
+        return self.finished

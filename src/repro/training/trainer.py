@@ -1,0 +1,76 @@
+"""Train step + loss; pjit-able and remat-aware.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure (state, batch) -> (state,
+metrics) function suitable for jax.jit with shardings (launch/train.py wires
+the mesh).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+jax.tree_util.register_dataclass(TrainState, data_fields=["params", "opt", "step"], meta_fields=[])
+
+
+def init_train_state(key, cfg: ModelConfig) -> TrainState:
+    params = model_lib.init_params(key, cfg)
+    return TrainState(params=params, opt=init_adamw(params), step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_train_state(jax.random.key(0), cfg))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits [B,S,V] f32, labels [B,S] int32; mean over valid tokens."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: {"tokens"|"embeds", "labels", optional "mask", "positions"}."""
+    inputs = {k: batch[k] for k in ("tokens", "embeds", "positions") if k in batch}
+    logits, aux = model_lib.forward(params, cfg, inputs)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce + cfg.router_aux_coef * aux["lb_loss"]
+    metrics = {"loss": loss, "ce": ce, "lb_loss": aux["lb_loss"], "drop_frac": aux["drop_frac"]}
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    def train_step(state: TrainState, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, cfg, batch
+        )
+        new_params, new_opt, opt_metrics = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics.update(opt_metrics)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, cfg, batch)
+        return metrics
+
+    return eval_step

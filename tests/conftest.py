@@ -1,0 +1,24 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+
+
+@pytest.fixture(autouse=True)
+def _no_act_sharding():
+    # tests run on the single CPU device; disable launch-time constraints
+    model_lib.set_activation_sharding(None)
+    yield
+    model_lib.set_activation_sharding(None)
+
+
+def reduced_fp32(arch: str):
+    return dataclasses.replace(get_config(arch, reduced=True), compute_dtype="float32")
+
+
+def tiny_params(arch: str, seed: int = 0):
+    cfg = reduced_fp32(arch)
+    return cfg, model_lib.init_params(jax.random.key(seed), cfg)

@@ -1,0 +1,124 @@
+"""Referential Injection (§3.6) + Validation Gate (§3.5)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import gate as gate_lib
+from repro.core import injection
+from repro.models import model as model_lib
+
+
+def _setup(arch="qwen3-8b"):
+    cfg = dataclasses.replace(get_config(arch, reduced=True), compute_dtype="float32")
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def test_injection_changes_output_only_for_accepted_lanes():
+    cfg, params = _setup()
+    B, S = 2, 16
+    tok = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    spec = model_lib.CacheSpec(kind="full", capacity=S + 16)
+    caches = model_lib.init_caches(cfg, B, spec)
+    _, _, caches = model_lib.prefill(params, cfg, {"tokens": tok}, caches, spec=spec)
+
+    thought = jax.random.randint(jax.random.key(2), (B, 4), 0, cfg.vocab_size)
+    vpos = jnp.full((B,), S, jnp.int32)
+    th_caches, th_hidden = injection.encode_thought_kv(params, cfg, thought, vpos)
+    accept = jnp.asarray([True, False])
+    injected = injection.inject(cfg, caches, th_caches, accept)
+
+    # lane 0 grew by 4, lane 1 untouched
+    lengths = np.asarray(injected.groups[0].length)  # [L, B]
+    assert (lengths[:, 0] == S + 4).all()
+    assert (lengths[:, 1] == S).all()
+
+    # next decode differs on lane 0, identical on lane 1
+    step_tok = jnp.zeros((B,), jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    lg_base, _, _ = model_lib.decode_step(
+        params, cfg, {"tokens": step_tok, "positions": pos}, caches, spec=spec
+    )
+    lg_inj, _, _ = model_lib.decode_step(
+        params, cfg, {"tokens": step_tok, "positions": pos}, injected, spec=spec
+    )
+    d0 = float(jnp.abs(lg_inj[0] - lg_base[0]).max())
+    d1 = float(jnp.abs(lg_inj[1] - lg_base[1]).max())
+    assert d0 > 1e-4, "accepted lane must feel the thought"
+    assert d1 < 1e-6, "rejected lane must be untouched"
+
+
+def test_injection_preserves_stream_positions():
+    """The visible stream's positions are NOT shifted by injection — the
+    thought lives at virtual positions (paper: 'non-intrusive')."""
+    cfg, params = _setup()
+    B, S = 1, 12
+    tok = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    spec = model_lib.CacheSpec(kind="full", capacity=S + 16)
+    caches = model_lib.init_caches(cfg, B, spec)
+    _, _, caches = model_lib.prefill(params, cfg, {"tokens": tok}, caches, spec=spec)
+    thought = jax.random.randint(jax.random.key(2), (B, 4), 0, cfg.vocab_size)
+    vpos = jnp.full((B,), 1000, jnp.int32)  # clearly-virtual index
+    th_caches, _ = injection.encode_thought_kv(params, cfg, thought, vpos)
+    injected = injection.inject(cfg, caches, th_caches, jnp.asarray([True]))
+    pos = np.asarray(injected.groups[0].pos)[0, 0]  # layer 0, lane 0
+    assert (pos[:S] == np.arange(S)).all()          # stream untouched
+    assert (pos[S : S + 4] == np.arange(1000, 1004)).all()  # virtual indices
+
+
+def test_synapse_injection_slots():
+    cfg, params = _setup()
+    B, S = 1, 16
+    spec = model_lib.CacheSpec(kind="synapse", n_landmarks=8, window=8, n_inject=4)
+    caches = model_lib.init_caches(cfg, B, spec)
+    thought = jax.random.randint(jax.random.key(2), (B, 3), 0, cfg.vocab_size)
+    th_caches, _ = injection.encode_thought_kv(params, cfg, thought, jnp.full((B,), 50, jnp.int32))
+    injected = injection.inject(cfg, caches, th_caches, jnp.asarray([True]))
+    assert int(np.asarray(injected.groups[0].inj_count)[0, 0]) == 3
+    # injected keys become visible to the next synapse decode step
+    tok = jnp.zeros((B,), jnp.int32)
+    lg0, _, _ = model_lib.decode_step(
+        params, cfg, {"tokens": tok, "positions": jnp.zeros((B,), jnp.int32)}, caches, spec=spec
+    )
+    lg1, _, _ = model_lib.decode_step(
+        params, cfg, {"tokens": tok, "positions": jnp.zeros((B,), jnp.int32)}, injected, spec=spec
+    )
+    assert float(jnp.abs(lg1 - lg0).max()) > 1e-5
+
+
+def test_ssm_state_blend():
+    cfg, params = _setup("rwkv6-1.6b")
+    B, S = 1, 12
+    tok = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    spec = model_lib.CacheSpec(kind="full", capacity=S)
+    caches = model_lib.init_caches(cfg, B, spec)
+    _, _, caches = model_lib.prefill(params, cfg, {"tokens": tok}, caches, spec=spec)
+    thought = jax.random.randint(jax.random.key(2), (B, 4), 0, cfg.vocab_size)
+    th_caches, _ = injection.encode_thought_kv(params, cfg, thought, jnp.zeros((B,), jnp.int32))
+    injected = injection.inject(cfg, caches, th_caches, jnp.asarray([True]), beta=0.3)
+    w0 = np.asarray(caches.groups[0].wkv)
+    w1 = np.asarray(injected.groups[0].wkv)
+    wt = np.asarray(th_caches.groups[0].wkv)
+    np.testing.assert_allclose(w1, 0.7 * w0 + 0.3 * wt, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+def test_gate_eq2():
+    h = jnp.asarray([[1.0, 0.0], [1.0, 0.0], [1.0, 0.0]])
+    t = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [-1.0, 0.0]])
+    accept, score = gate_lib.validate(h, t, theta=0.5)
+    np.testing.assert_allclose(np.asarray(score), [1.0, 0.0, -1.0], atol=1e-6)
+    assert np.asarray(accept).tolist() == [True, False, False]
+
+
+def test_gate_scale_invariance():
+    key = jax.random.key(0)
+    h = jax.random.normal(key, (4, 32))
+    t = jax.random.normal(jax.random.key(1), (4, 32))
+    _, s1 = gate_lib.validate(h, t)
+    _, s2 = gate_lib.validate(h * 100.0, t * 0.01)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)

@@ -1,0 +1,238 @@
+"""Unit tests for the model substrate: MoE dispatch, Mamba2 chunked SSD,
+RWKV6 recurrence, rope, blocked attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.kernels.ref import mamba2_chunk_ref
+from repro.models import attention, cache as cache_lib, mamba2, moe, rwkv6
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def _moe_cfg(E=4, k=2, dm=32, ff=64):
+    return dataclasses.replace(
+        get_config("qwen3-moe-30b-a3b", reduced=True),
+        n_experts=E,
+        experts_per_token=k,
+        d_model=dm,
+        d_ff=ff,
+        n_shared_experts=0,
+        moe_capacity_factor=100.0,  # dropless for the equivalence test
+        compute_dtype="float32",
+    )
+
+
+def _dense_moe_reference(p, cfg, x):
+    """Per-token explicit expert evaluation (no dispatch tricks)."""
+    T, dm = x.shape
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    g, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    g = g / g.sum(-1, keepdims=True)
+    out = jnp.zeros_like(x)
+    for t in range(T):
+        acc = jnp.zeros((dm,))
+        for j in range(cfg.experts_per_token):
+            e = int(idx[t, j])
+            h = jax.nn.silu(x[t] @ p["experts"]["gate"][e]) * (x[t] @ p["experts"]["up"][e])
+            acc = acc + g[t, j] * (h @ p["experts"]["down"][e])
+        out = out.at[t].set(acc)
+    return out
+
+
+def test_moe_dispatch_matches_dense_reference():
+    cfg = _moe_cfg()
+    p = moe.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 12, cfg.d_model))
+    y, aux = moe.moe_forward(p, cfg, x)
+    y_ref = _dense_moe_reference(p, cfg, x[0])
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    assert float(aux["drop_frac"]) == 0.0
+
+
+def test_moe_capacity_drops_counted():
+    cfg = dataclasses.replace(_moe_cfg(), moe_capacity_factor=0.25)
+    p = moe.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model))
+    _, aux = moe.moe_forward(p, cfg, x)
+    assert float(aux["drop_frac"]) > 0.0
+
+
+def test_moe_lb_loss_uniform_is_one():
+    """With perfectly uniform routing the switch loss ~= E * (1/E * k/E * E/k)
+    -> lower-bounded by 1 after the standard normalization."""
+    cfg = _moe_cfg(E=8, k=2)
+    p = moe.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(5), (4, 128, cfg.d_model))
+    _, aux = moe.moe_forward(p, cfg, x)
+    assert float(aux["lb_loss"]) >= cfg.experts_per_token * 0.98
+
+
+def test_moe_shared_expert_added():
+    cfg = dataclasses.replace(_moe_cfg(), n_shared_experts=1)
+    p = moe.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model))
+    y_with, _ = moe.moe_forward(p, cfg, x)
+    p2 = dict(p)
+    p2_shared = jax.tree.map(jnp.zeros_like, p["shared"])
+    p2 = {**p, "shared": p2_shared}
+    y_zero_shared, _ = moe.moe_forward(p2, cfg, x)
+    assert float(jnp.abs(y_with - y_zero_shared).max()) > 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Mamba2: chunked SSD vs naive recurrence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (48, 16)])
+def test_mamba2_chunked_matches_recurrence(S, chunk):
+    cfg = dataclasses.replace(
+        get_config("zamba2-1.2b", reduced=True),
+        compute_dtype="float32",
+        ssm_chunk=chunk,
+        shared_attn_every=0,
+    )
+    p = mamba2.mamba2_init(jax.random.key(0), cfg, jnp.float32)
+    B = 2
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model)) * 0.5
+    y_chunked = mamba2.mamba2_forward(p, cfg, x)
+
+    # naive recurrence through the decode step
+    state = cache_lib.init_mamba2_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        yt, state = mamba2.mamba2_decode(p, cfg, x[:, t : t + 1], state)
+        outs.append(yt)
+    y_naive = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_naive), rtol=2e-3, atol=2e-3)
+
+
+def test_mamba2_terminal_state_matches_decode_chain():
+    cfg = dataclasses.replace(
+        get_config("zamba2-1.2b", reduced=True),
+        compute_dtype="float32",
+        ssm_chunk=8,
+        shared_attn_every=0,
+    )
+    p = mamba2.mamba2_init(jax.random.key(0), cfg, jnp.float32)
+    B, S = 1, 24
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model)) * 0.5
+    _, state_fwd = mamba2.mamba2_forward(p, cfg, x, return_state=True)
+    state = cache_lib.init_mamba2_state(cfg, B, jnp.float32)
+    for t in range(S):
+        _, state = mamba2.mamba2_decode(p, cfg, x[:, t : t + 1], state)
+    np.testing.assert_allclose(np.asarray(state_fwd.ssm), np.asarray(state.ssm), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(state_fwd.conv, np.float32), np.asarray(state.conv, np.float32), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_mamba2_chunk_ref_oracle():
+    """The kernel-test oracle itself agrees with an independent numpy loop."""
+    B, S, nh, dh, ds = 1, 16, 2, 4, 3
+    ks = jax.random.split(jax.random.key(2), 4)
+    x = jax.random.normal(ks[0], (B, S, nh, dh))
+    la = -jax.random.uniform(ks[1], (B, S, nh))
+    b = jax.random.normal(ks[2], (B, S, ds))
+    c = jax.random.normal(ks[3], (B, S, ds))
+    y = mamba2_chunk_ref(x, la, b, c, chunk=4)
+    state = np.zeros((nh, dh, ds))
+    for t in range(S):
+        state = state * np.exp(np.asarray(la)[0, t])[:, None, None] + np.einsum(
+            "hd,s->hds", np.asarray(x)[0, t], np.asarray(b)[0, t]
+        )
+        yt = np.einsum("hds,s->hd", state, np.asarray(c)[0, t])
+        np.testing.assert_allclose(np.asarray(y)[0, t], yt, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6: parallel scan vs decode chain
+# ---------------------------------------------------------------------------
+def test_rwkv6_forward_matches_decode_chain():
+    cfg = dataclasses.replace(get_config("rwkv6-1.6b", reduced=True), compute_dtype="float32")
+    tp = rwkv6.rwkv6_tmix_init(jax.random.key(0), cfg, jnp.float32)
+    cp = rwkv6.rwkv6_cmix_init(jax.random.key(1), cfg, jnp.float32)
+    B, S = 2, 20
+    x = jax.random.normal(jax.random.key(2), (B, S, cfg.d_model)) * 0.5
+    y_fwd, (shift, wkv) = rwkv6.rwkv6_tmix_forward(tp, cfg, x)
+    state = cache_lib.init_rwkv6_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        yt, state = rwkv6.rwkv6_tmix_decode(tp, cfg, x[:, t : t + 1], state)
+        outs.append(yt)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_fwd), np.asarray(y_dec), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(wkv), np.asarray(state.wkv), rtol=2e-4, atol=2e-4)
+
+    yc_fwd, last = rwkv6.rwkv6_cmix_forward(cp, cfg, x)
+    state2 = cache_lib.init_rwkv6_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        yt, state2 = rwkv6.rwkv6_cmix_decode(cp, cfg, x[:, t : t + 1], state2)
+        outs.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(yc_fwd), np.asarray(jnp.concatenate(outs, 1)), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_rwkv6_decay_in_unit_interval():
+    cfg = dataclasses.replace(get_config("rwkv6-1.6b", reduced=True), compute_dtype="float32")
+    tp = rwkv6.rwkv6_tmix_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model))
+    _, _, _, _, w = rwkv6._tmix_projections(tp, cfg, x, jnp.zeros_like(x))
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# rope / mrope / attention
+# ---------------------------------------------------------------------------
+def test_rope_relative_property():
+    """q.k after rope depends only on relative distance."""
+    d = 32
+    q = jax.random.normal(jax.random.key(0), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.key(1), (1, 1, 1, d))
+    def score(tq, tk):
+        qr = apply_rope(q, jnp.asarray([[tq]]), 10000.0)
+        kr = apply_rope(k, jnp.asarray([[tk]]), 10000.0)
+        return float(jnp.sum(qr * kr))
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)
+    assert score(5, 3) != pytest.approx(score(5, 4), rel=1e-3)
+
+
+def test_mrope_reduces_to_rope_for_text():
+    d = 32
+    x = jax.random.normal(jax.random.key(0), (2, 6, 4, d))
+    pos = jnp.broadcast_to(jnp.arange(6, dtype=jnp.int32)[None], (2, 6))
+    pos3 = jnp.broadcast_to(pos[:, None, :], (2, 3, 6))
+    sections = (4, 6, 6)
+    a = apply_rope(x, pos, 10000.0)
+    b = apply_mrope(x, pos3, 10000.0, sections)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(4, 48), chunk=st.sampled_from([4, 8, 16, 1024]))
+def test_blocked_attention_matches_naive(S, chunk):
+    B, H, Hkv, D = 1, 4, 2, 16
+    ks = jax.random.split(jax.random.key(42), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    out = attention.blocked_attention(q, k, v, causal=True, chunk=chunk)
+    # naive
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k) / np.sqrt(D)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    ref = jnp.einsum("bkgqt,btkd->bqkgd", p, v).reshape(B, S, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,160 @@
+"""Topological Synapse properties (paper §3.3) — incl. hypothesis-based
+invariants of the hybrid density-coverage selection."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import synapse as synapse_lib
+from repro.models import cache as cache_lib
+from repro.models import model as model_lib
+
+
+def _full_cache(key, B, T, hkv, d, length=None):
+    ks = jax.random.split(key, 3)
+    return cache_lib.FullCache(
+        k=jax.random.normal(ks[0], (B, T, hkv, d)),
+        v=jax.random.normal(ks[1], (B, T, hkv, d)),
+        pos=jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T)),
+        score=jax.random.uniform(ks[2], (B, T)),
+        length=jnp.full((B,), T if length is None else length, jnp.int32),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    T=st.integers(8, 64),
+    k=st.integers(1, 16),
+    alpha=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_selection_invariants(T, k, alpha, seed):
+    """Selected indices are unique, valid, and k of them (when T >= k)."""
+    k = min(k, T)
+    B, hkv, d = 2, 2, 16
+    cache = _full_cache(jax.random.key(seed), B, T, hkv, d)
+    q = jax.random.normal(jax.random.key(seed + 1), (B, 4, d))
+    policy = synapse_lib.SynapsePolicy(alpha=alpha)
+    valid = jnp.ones((B, T), bool)
+    density = synapse_lib.attention_density(q, cache.k, valid)
+    idx, score, picked = synapse_lib.select_landmarks(cache.k, valid, density, k, policy)
+    idx_np = np.asarray(idx)
+    assert idx_np.shape == (B, k)
+    for b in range(B):
+        assert len(set(idx_np[b].tolist())) == k  # unique
+        assert (idx_np[b] >= 0).all() and (idx_np[b] < T).all()
+    assert bool(picked.all())
+
+
+def test_pure_density_selects_top_attention():
+    """alpha=1 reduces to the paper's pure attention-score summation top-k."""
+    B, T, hkv, d, k = 1, 32, 1, 16, 4
+    cache = _full_cache(jax.random.key(0), B, T, hkv, d)
+    q = jax.random.normal(jax.random.key(1), (B, 2, d))
+    valid = jnp.ones((B, T), bool)
+    density = synapse_lib.attention_density(q, cache.k, valid)
+    idx, _, _ = synapse_lib.select_landmarks(
+        cache.k, valid, density, k, synapse_lib.SynapsePolicy(alpha=1.0)
+    )
+    expect = jnp.argsort(-density, axis=-1)[:, :k]
+    assert set(np.asarray(idx)[0].tolist()) == set(np.asarray(expect)[0].tolist())
+
+
+def test_pure_coverage_is_farthest_point():
+    """alpha=0: greedy maxmin — every new landmark is the farthest point
+    from the current set (classic witness-landmark construction)."""
+    B, T, hkv, d, k = 1, 24, 1, 8, 6
+    cache = _full_cache(jax.random.key(3), B, T, hkv, d)
+    q = jax.random.normal(jax.random.key(4), (B, 2, d))
+    valid = jnp.ones((B, T), bool)
+    density = synapse_lib.attention_density(q, cache.k, valid)
+    idx, _, _ = synapse_lib.select_landmarks(
+        cache.k, valid, density, k, synapse_lib.SynapsePolicy(alpha=0.0, coverage_cap=1e9)
+    )
+    pooled = np.asarray(cache.k.mean(axis=2))[0]
+    chosen = np.asarray(idx)[0].tolist()
+    # replay greedy farthest-point (after arbitrary argmax first pick)
+    sel = [chosen[0]]
+    for step in range(1, k):
+        dmin = np.min(
+            np.linalg.norm(pooled[:, None, :] - pooled[np.asarray(sel)][None], axis=-1), axis=1
+        )
+        dmin[np.asarray(sel)] = -np.inf
+        assert dmin[chosen[step]] == pytest.approx(np.max(dmin), rel=1e-5), step
+        sel.append(chosen[step])
+
+
+def test_coverage_reduces_hausdorff():
+    """Pure-coverage (alpha=0) landmarks have a lower Hausdorff distance to
+    the key cloud than pure-density top-k (the TDA claim of [1]); the hybrid
+    interpolates."""
+    B, T, hkv, d, k = 1, 128, 1, 16, 8
+    cache = _full_cache(jax.random.key(7), B, T, hkv, d)
+    q = jax.random.normal(jax.random.key(8), (B, 2, d))
+    valid = jnp.ones((B, T), bool)
+    density = synapse_lib.attention_density(q, cache.k, valid)
+    pooled = np.asarray(cache.k.mean(axis=2))[0]
+
+    def hausdorff(idx):
+        lm = pooled[np.asarray(idx)[0]]
+        dmin = np.min(np.linalg.norm(pooled[:, None] - lm[None], axis=-1), axis=1)
+        return float(np.max(dmin))
+
+    idx_dens, _, _ = synapse_lib.select_landmarks(
+        cache.k, valid, density, k, synapse_lib.SynapsePolicy(alpha=1.0)
+    )
+    idx_cov, _, _ = synapse_lib.select_landmarks(
+        cache.k, valid, density, k, synapse_lib.SynapsePolicy(alpha=0.0, coverage_cap=1e9)
+    )
+    assert hausdorff(idx_cov) <= hausdorff(idx_dens) + 1e-6
+
+
+def test_compress_respects_short_prompt():
+    B, T, hkv, d, k = 2, 16, 2, 16, 32  # k > T
+    cfg = dataclasses.replace(
+        get_config("qwen3-8b", reduced=True), compute_dtype="float32"
+    )
+    cache = _full_cache(jax.random.key(0), B, T, cfg.n_kv_heads, cfg.d_head, length=10)
+    q = jax.random.normal(jax.random.key(1), (B, cfg.n_heads, cfg.d_head))
+    syn = synapse_lib.compress(cfg, cache, q, k, window=8, n_inject=2)
+    assert int(syn.lm_count[0]) == 10  # only the valid prefix
+    assert syn.lm_k.shape[1] == k
+
+
+def test_compression_ratio_is_98_percent():
+    """Paper claim: k=64 on a 4k context = 98.4% token reduction; the synapse
+    bytes shrink accordingly."""
+    cfg = get_config("qwen2.5-0.5b")
+    L_ctx = 4096
+    full = cache_lib.init_full_cache(cfg, 1, L_ctx)
+    syn = cache_lib.init_synapse_cache(cfg, 1, n_landmarks=64, window=0 or 1, n_inject=1)
+    ratio = 1 - 64 / L_ctx
+    assert ratio > 0.98
+    assert cache_lib.cache_bytes(syn) < cache_lib.cache_bytes(full) * 0.05
+
+
+def test_streaming_eviction_promotes_high_scores():
+    """A token that received heavy attention while in the window must be
+    promoted to landmark when it graduates."""
+    cfg = dataclasses.replace(get_config("qwen3-8b", reduced=True), compute_dtype="float32")
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    B, W, K = 1, 8, 4
+    spec = model_lib.CacheSpec(kind="synapse", n_landmarks=K, window=W, n_inject=1)
+    caches = model_lib.init_caches(cfg, B, spec)
+    tok = jax.random.randint(jax.random.key(2), (B, 64), 0, cfg.vocab_size)
+    spec_full = spec
+    # run enough decode steps to overflow the window several times
+    cache0 = jax.tree.map(lambda a: a, caches)
+    c = caches
+    for t in range(24):
+        pos = jnp.full((B,), t, jnp.int32)
+        _, _, c = model_lib.decode_step(
+            params, cfg, {"tokens": tok[:, t], "positions": pos}, c, spec=spec_full
+        )
+    lm_count = int(jax.tree.leaves(c.groups[0])[0].shape[0] and np.asarray(c.groups[0].lm_count)[0, 0])
+    assert lm_count > 0  # landmarks were populated by graduation
+    assert int(np.asarray(c.groups[0].length)[0, 0]) == 24
