@@ -1,9 +1,12 @@
 """Paper §5.2 "Performance Characteristics": graceful degradation — main
 agent step latency as side agents scale.
 
-On TPU side agents ride the same batched step (near-free until the batch
-exhausts MXU headroom); on this CPU container they serialize, so we report
-BOTH the measured wall numbers and the derived batched-cost model.
+Post fused-tick engine: each tick is ONE jitted dispatch with donated
+caches; sampled tokens drain to the host every `sync_every` ticks. The
+numbers here are therefore dispatch-bound no longer — side agents ride the
+same fused step and the dominant cost is the (tiny, CPU-emulated) model
+itself. We report measured wall time per tick plus the engine's dispatch
+and host-sync counters so the perf trajectory is auditable across PRs.
 """
 from __future__ import annotations
 
@@ -20,36 +23,46 @@ from repro.models import model as model_lib
 from repro.serving.sampler import SamplingParams
 
 
-def run() -> dict:
+def run(side_counts=(0, 2, 4, 8), ticks: int = 16, warmup: int = 16, sync_every: int = 8) -> dict:
     cfg = get_config("qwen2.5-0.5b", reduced=True)
     params = model_lib.init_params(jax.random.key(0), cfg)
     tok = ByteTokenizer(cfg.vocab_size)
-    out = {}
+    out = {"sync_every": sync_every, "per_side": {}}
     base = None
-    for n_side in (0, 2, 4, 8):
+    for n_side in side_counts:
         prism = Prism(params, cfg)
         eng = CortexEngine(
             prism, tok, n_main=1, max_side=max(n_side, 1), main_capacity=256,
             side_max_steps=10_000, inject_tokens=8, theta=2.0,  # never merge mid-run
-            sampling=SamplingParams(temperature=1.0),
+            sampling=SamplingParams(temperature=1.0), sync_every=sync_every,
         )
         eng.submit("benchmark prompt " + "[TASK: think] " * n_side, lane=0)
-        for _ in range(3):
-            eng.tick()  # warm both jit paths + spawn sides
+        for _ in range(warmup):
+            eng.tick()  # warm the fused-tick jits + spawn sides + drain paths
+        stats0 = dict(eng.stats)
         t0 = time.perf_counter()
-        ticks = 15
         for _ in range(ticks):
             eng.tick()
+        jax.block_until_ready(eng.state.main_ring)
         dt = (time.perf_counter() - t0) / ticks
         active_sides = sum(s.active for s in eng.sides)
+        dispatches = eng.stats["tick_dispatches"] - stats0["tick_dispatches"]
+        syncs = eng.stats["host_syncs"] - stats0["host_syncs"]
         if base is None:
             base = dt
         emit(
             f"throughput.sides_{n_side}",
             dt * 1e6,
-            f"active_sides={active_sides} slowdown={dt/base:.2f}x",
+            f"active_sides={active_sides} slowdown={dt/base:.2f}x "
+            f"dispatches/tick={dispatches/ticks:.2f} syncs/tick={syncs/ticks:.2f}",
         )
-        out[n_side] = {"tick_s": dt, "slowdown": dt / base, "active": active_sides}
+        out["per_side"][n_side] = {
+            "tick_s": dt,
+            "slowdown": dt / base,
+            "active": active_sides,
+            "dispatches_per_tick": dispatches / ticks,
+            "host_syncs_per_tick": syncs / ticks,
+        }
     return out
 
 

@@ -31,6 +31,15 @@ def main() -> None:
     with open("benchmarks/artifacts/bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
 
+    # top-level perf-trajectory artifact: tick latency per side-count plus
+    # the engine's dispatch/sync counters, tracked across PRs. Never clobber
+    # the recorded baseline with a failed run.
+    throughput = results.get("throughput", {})
+    if throughput and "error" not in throughput:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(root, "BENCH_throughput.json"), "w") as f:
+            json.dump(throughput, f, indent=1, default=str)
+
 
 if __name__ == "__main__":
     main()

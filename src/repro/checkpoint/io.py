@@ -12,7 +12,18 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: only save/load need it
+    zstandard = None
+
+
+def _require_zstd():
+    if zstandard is None:
+        raise ModuleNotFoundError(
+            "zstandard is required for checkpoint save/load (pip install zstandard)"
+        )
 
 
 def _encode_tree(tree) -> bytes:
@@ -32,6 +43,7 @@ def _encode_tree(tree) -> bytes:
 
 
 def save(path: str, tree, *, level: int = 3) -> None:
+    _require_zstd()
     raw = _encode_tree(tree)
     comp = zstandard.ZstdCompressor(level=level).compress(raw)
     tmp = path + ".tmp"
@@ -43,6 +55,7 @@ def save(path: str, tree, *, level: int = 3) -> None:
 
 def load(path: str, like):
     """Restore into the structure of `like` (a pytree with array leaves)."""
+    _require_zstd()
     with open(path, "rb") as f:
         raw = zstandard.ZstdDecompressor().decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)

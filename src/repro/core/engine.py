@@ -1,18 +1,32 @@
-"""The Cortex Engine — River & Stream topology on TPU (DESIGN.md §3).
+"""The Cortex Engine — fused-tick River & Stream topology (DESIGN.md §3).
 
 The paper runs the main agent ("River") and side agents ("Streams") on
-concurrent CUDA streams. The TPU-native equivalent implemented here:
+concurrent CUDA streams. The TPU-native equivalent is a *device-resident
+scheduler hot loop*:
 
 * ONE Prism (shared weights) — no per-agent copies (paper §3.2).
-* Main agents are lanes of a batched full-cache ``decode_step``; side agents
-  are lanes of a batched synapse-cache ``decode_step``. Each engine `tick`
-  advances both batches by one fused step — concurrency through batching,
-  priority through admission policy (main lanes are always stepped; side
-  lanes only while active).
-* Logical asynchrony is preserved: a side agent reasons over the landmark
-  snapshot taken at spawn time (token t-k) while the river continues past t.
-* Spawn = hybrid landmark compression of the parent's cache (paper §3.3);
-  merge = Validation Gate (§3.5) then Referential Injection (§3.6).
+* ONE jitted dispatch per tick: ``fused_tick`` advances the main-lane batch
+  (full caches), the side-lane batch (synapse caches), and the on-device
+  samplers in a single donated call over a :class:`TickState` pytree. Cache
+  buffers are donated, so a tick updates them in place instead of doubling
+  peak memory.
+* ZERO blocking host syncs per tick: sampled tokens are written into small
+  on-device ring buffers and drained to the host only every ``sync_every``
+  ticks (or lazily via :meth:`CortexEngine.drain` / ``memory_report``). The
+  router scan, spawn, and merge logic run against the drained buffer at that
+  boundary — host-side control at 1/sync_every the rate of device steps.
+* Side-agent prompts are teacher-forced from an on-device prompt buffer
+  (``side_prompt``/``side_plen``/``side_step``), so a freshly spawned stream
+  needs no host involvement until its next drain.
+* Spawn = hybrid landmark compression of the *parent lane only* (paper
+  §3.3), via the fused ``kernels.ops.landmark_score`` sweep; merge =
+  Validation Gate (§3.5) + Referential Injection (§3.6) fused into one
+  dispatch (``injection.merge_thought``).
+
+Performance invariants (asserted by tests/test_fused_tick.py):
+  * ``tick()`` issues exactly ONE jitted dispatch;
+  * no blocking host transfer happens outside ``drain()``;
+  * ``drain()`` performs exactly one device→host pull of the token rings.
 """
 from __future__ import annotations
 
@@ -24,11 +38,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gate as gate_lib
 from repro.core import injection
 from repro.core import synapse as synapse_lib
 from repro.core.prism import Prism, tree_bytes
-from repro.core.router import CortexRouter, Trigger
+from repro.core.router import CortexRouter
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import cache as cache_lib
 from repro.models import model as model_lib
@@ -41,44 +54,207 @@ def _lane_slice(tree, lane: int):
     return jax.tree.map(lambda a: a[:, lane], tree)
 
 
-def _lane_write(dst, src_tree, dst_lane: int, src_lane: int):
-    """dst[:, dst_lane] <- src[:, src_lane] across a stacked cache pytree."""
-    return jax.tree.map(lambda d, s: d.at[:, dst_lane].set(s[:, src_lane].astype(d.dtype)), dst, src_tree)
-
-
 def spawn_caches(cfg: ModelConfig, main_caches: model_lib.ModelCaches, spec: model_lib.CacheSpec):
     """Compress a main agent's caches into fresh side-agent synapse caches.
 
-    Attention groups: hybrid landmark compression (density = the cache's
-    accumulated attention mass). SSM groups: the state is already O(1) — the
-    side agent receives a copy (zero marginal context, noted in DESIGN.md).
-    MLA: the latent cache is compressed by landmark selection on the latent
-    point cloud is future work; sides receive the latent cache as-is.
+    Attention groups: hybrid landmark compression with the density term from
+    the fused ``kernels.ops.landmark_score`` sweep. The paper's Q_t (the
+    parent's current query) is approximated by the most recent resident key,
+    pooled over kv heads and broadcast to the query heads — q and k of the
+    newest token are projections of the same hidden state, so its key is the
+    best per-layer stand-in available post-hoc. The stacked layer axis is
+    folded into the batch axis, so all layers compress in ONE kernel sweep
+    instead of a vmap of L separate passes.
+
+    SSM groups: the state is already O(1) — the side agent receives a copy
+    (zero marginal context, noted in DESIGN.md). MLA: latent landmark
+    selection is future work; sides receive the latent cache as-is.
     """
     groups = []
     for grp, c in zip(cfg.layer_groups(), main_caches.groups):
         if grp.kind == "attn" and isinstance(c, cache_lib.FullCache):
-            comp = jax.vmap(
-                lambda layer_cache: synapse_lib.compress(
-                    cfg, layer_cache, None, spec.n_landmarks, spec.window, spec.n_inject, spec.policy
-                )
-            )(c)
-            groups.append(comp)
+            groups.append(_compress_stacked(cfg, c, spec))
         else:
             groups.append(c)
     shared = main_caches.shared
     if shared is not None and isinstance(shared, cache_lib.FullCache):
-        shared = jax.vmap(
-            lambda layer_cache: synapse_lib.compress(
-                cfg, layer_cache, None, spec.n_landmarks, spec.window, spec.n_inject, spec.policy
-            )
-        )(shared)
+        shared = _compress_stacked(cfg, shared, spec)
     return model_lib.ModelCaches(groups=tuple(groups), shared=shared)
+
+
+def _compress_stacked(cfg: ModelConfig, c: cache_lib.FullCache, spec: model_lib.CacheSpec):
+    """[L, B, ...] FullCache -> [L, B, ...] SynapseCache, layers folded into
+    the batch axis (one fused scoring sweep for the whole stack)."""
+    L, B = c.pos.shape[:2]
+    flat = jax.tree.map(lambda a: a.reshape((L * B,) + a.shape[2:]), c)
+    last = jnp.clip(flat.length - 1, 0, flat.k.shape[1] - 1)
+    k_last = jnp.take_along_axis(flat.k, last[:, None, None, None], axis=1)[:, 0]  # [LB, Hkv, D]
+    g = cfg.n_heads // k_last.shape[1]
+    q_proxy = jnp.repeat(k_last, g, axis=1)  # [LB, H, D] — Q_t ~ K_t proxy
+    comp = synapse_lib.compress(
+        cfg, flat, q_proxy, spec.n_landmarks, spec.window, spec.n_inject, spec.policy
+    )
+    return jax.tree.map(lambda a: a.reshape((L, B) + a.shape[1:]), comp)
+
+
+# ---------------------------------------------------------------------------
+# device-resident tick state
+# ---------------------------------------------------------------------------
+@dataclass
+class TickState:
+    """Everything ``fused_tick`` reads and writes — one donated pytree."""
+
+    key: jax.Array          # PRNG state
+    cursor: jax.Array       # [] int32 — ring write index (ticks since drain)
+    # river lanes
+    main_tok: jax.Array     # [M] int32 — last token per lane
+    main_pos: jax.Array     # [M] int32 — next rope position
+    main_active: jax.Array  # [M] bool
+    main_hidden: jax.Array  # [M, d] f32 — gate input
+    main_ring: jax.Array    # [M, R] int32 — sampled tokens awaiting drain (-1 = none)
+    main_caches: model_lib.ModelCaches
+    # stream lanes
+    side_tok: jax.Array     # [S] int32
+    side_pos: jax.Array     # [S] int32
+    side_active: jax.Array  # [S] bool
+    side_step: jax.Array    # [S] int32 — ticks since spawn
+    side_plen: jax.Array    # [S] int32 — teacher-forced prompt length
+    side_prompt: jax.Array  # [S, P] int32 — on-device prompt buffer
+    side_hidden: jax.Array  # [S, d] f32
+    side_ring: jax.Array    # [S, R] int32
+    side_caches: model_lib.ModelCaches
+
+
+jax.tree_util.register_dataclass(
+    TickState, data_fields=[f for f in TickState.__dataclass_fields__], meta_fields=[]
+)
+
+
+def fused_tick(
+    params,
+    state: TickState,
+    *,
+    cfg: ModelConfig,
+    main_spec: model_lib.CacheSpec,
+    side_spec: model_lib.CacheSpec,
+    sampling: SamplingParams,
+    step_sides: bool = True,
+) -> TickState:
+    """One scheduler tick, entirely on device: main-lane decode, side-lane
+    decode (synapse caches, Pallas attend), sampling, ring-buffer append.
+
+    Inactive lanes decode garbage harmlessly (their cursors are frozen and
+    their caches are fully rewritten on admission) — concurrency through
+    batching, priority through the active masks. ``step_sides=False``
+    compiles the river-only variant the engine uses while no stream is
+    active (side activity only changes at drain boundaries, so the host
+    knows which variant applies without reading device state).
+    """
+    key, k_tick = jax.random.split(state.key)
+    m_act = state.main_active
+    s_act = state.side_active
+    M = m_act.shape[0]
+
+    # ---- river step ----
+    logits_m, hidden_m, main_caches = model_lib.decode_step(
+        params, cfg, {"tokens": state.main_tok, "positions": state.main_pos},
+        state.main_caches, spec=main_spec,
+    )
+
+    if step_sides:
+        # teacher-force the on-device task prompt, then free-run from the
+        # last sampled token; the sampled token "counts" from the last
+        # forced step on.
+        forced = state.side_step < state.side_plen
+        pidx = jnp.clip(state.side_step, 0, state.side_prompt.shape[1] - 1)
+        prompt_tok = jnp.take_along_axis(state.side_prompt, pidx[:, None], axis=1)[:, 0]
+        in_tok = jnp.where(s_act, jnp.where(forced, prompt_tok, state.side_tok), 0)
+        in_pos = jnp.where(s_act, state.side_pos, 0)
+        logits_s, hidden_s, side_caches = model_lib.decode_step(
+            params, cfg, {"tokens": in_tok, "positions": in_pos},
+            state.side_caches, spec=side_spec,
+        )
+        # one categorical over all lanes (one threefry chain per tick)
+        samp = sample(k_tick, jnp.concatenate([logits_m, logits_s], axis=0), sampling)
+        samp_m, samp_s = samp[:M], samp[M:]
+    else:
+        samp_m = sample(k_tick, logits_m, sampling)
+
+    # river-lane state transition (shared by both variants)
+    ring_m = jnp.where(m_act, samp_m, -1)
+    new_state = dataclasses.replace(
+        state,
+        key=key,
+        cursor=state.cursor + 1,
+        main_tok=jnp.where(m_act, samp_m, state.main_tok),
+        main_pos=state.main_pos + m_act.astype(jnp.int32),
+        main_hidden=hidden_m.astype(jnp.float32),
+        main_ring=jax.lax.dynamic_update_slice(
+            state.main_ring, ring_m[:, None], (0, state.cursor)
+        ),
+        main_caches=main_caches,
+    )
+    if not step_sides:
+        return new_state
+
+    keep = s_act & (state.side_step >= state.side_plen - 1)
+    ring_s = jnp.where(keep, samp_s, -1)
+    return dataclasses.replace(
+        new_state,
+        side_tok=jnp.where(keep, samp_s, state.side_tok),
+        side_pos=state.side_pos + s_act.astype(jnp.int32),
+        side_step=state.side_step + s_act.astype(jnp.int32),
+        side_hidden=hidden_s.astype(jnp.float32),
+        side_ring=jax.lax.dynamic_update_slice(
+            state.side_ring, ring_s[:, None], (0, state.cursor)
+        ),
+        side_caches=side_caches,
+    )
+
+
+# ---------------------------------------------------------------------------
+# small donated state-transition helpers (drain-time only). They take ONLY
+# the small per-lane field arrays — never the cache trees, whose buffers may
+# already be donated to the prefill/spawn/merge dispatch of the same event.
+# ---------------------------------------------------------------------------
+def _admit_main_fields(tok_a, pos_a, act_a, hid_a, lane, tok, pos, hidden):
+    return (
+        tok_a.at[lane].set(tok),
+        pos_a.at[lane].set(pos),
+        act_a.at[lane].set(True),
+        hid_a.at[lane].set(hidden.astype(hid_a.dtype)),
+    )
+
+
+def _admit_side_fields(prompt_a, plen_a, step_a, tok_a, pos_a, act_a, lane, prompt, plen, last_tok, pos):
+    return (
+        prompt_a.at[lane].set(prompt),
+        plen_a.at[lane].set(plen),
+        step_a.at[lane].set(0),
+        tok_a.at[lane].set(last_tok),
+        pos_a.at[lane].set(pos),
+        act_a.at[lane].set(True),
+    )
+
+
+def _spawn_lane(cfg: ModelConfig, side_spec, main_caches, side_caches, parent_lane, side_lane):
+    """Compress ONE parent lane and scatter it into ONE side lane — no
+    all-lane vmap, no full-tree copies (the legacy path compressed every
+    main lane to use one)."""
+    parent = jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, parent_lane, 1, axis=1), main_caches
+    )
+    comp = spawn_caches(cfg, parent, side_spec)
+    return jax.tree.map(
+        lambda d, s: jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype), side_lane, axis=1),
+        side_caches,
+        comp,
+    )
 
 
 @dataclass
 class AgentView:
-    """Host-side bookkeeping for one agent lane."""
+    """Host-side bookkeeping for one agent lane (refreshed at drain time)."""
 
     agent_id: str
     lane: int
@@ -87,10 +263,9 @@ class AgentView:
     task: str = ""
     text: str = ""
     tokens: list = field(default_factory=list)
-    position: int = 0          # next rope position
+    position: int = 0          # next rope position (drain-time mirror)
     active: bool = False
     steps: int = 0
-    pending_prompt: list = field(default_factory=list)
     prompt_len: int = 0
 
 
@@ -109,96 +284,249 @@ class CortexEngine:
         side_max_steps: int = 64,
         sampling: SamplingParams = SamplingParams(temperature=0.8),
         seed: int = 0,
+        sync_every: int = 1,
+        side_prompt_cap: int = 64,
+        compute_dtype: str | None = None,
     ):
         self.prism = prism
-        self.cfg = prism.cfg
+        cfg = prism.cfg
+        # Serving dtype policy: CPU has no native bf16 — XLA emulates it with
+        # up/down converts on every op, strictly slower than f32. Auto-pick
+        # f32 there; accelerator backends keep the configured dtype.
+        if compute_dtype is None and cfg.compute_dtype == "bfloat16" and jax.default_backend() == "cpu":
+            compute_dtype = "float32"
+        if compute_dtype is not None:
+            cfg = dataclasses.replace(cfg, compute_dtype=compute_dtype)
+        self.cfg = cfg
         self.tok = tokenizer
         self.router = CortexRouter()
         self.theta = theta
         self.inject_tokens = inject_tokens
         self.side_max_steps = side_max_steps
         self.sampling = sampling
-        self._key = jax.random.key(seed)
+        self.sync_every = max(1, sync_every)
+        self.side_prompt_cap = side_prompt_cap
 
         self.main_spec = model_lib.CacheSpec(kind="full", capacity=main_capacity)
         self.side_spec = side_spec or model_lib.CacheSpec(
             kind="synapse", n_landmarks=64, window=64, n_inject=inject_tokens
         )
         self.n_main, self.max_side = n_main, max_side
-        self.main_caches = model_lib.init_caches(self.cfg, n_main, self.main_spec)
-        self.side_caches = model_lib.init_caches(self.cfg, max_side, self.side_spec)
         self.mains = [AgentView(f"main{i}", i, "main") for i in range(n_main)]
         self.sides = [AgentView(f"side{i}", i, "side") for i in range(max_side)]
-        self.main_hidden = jnp.zeros((n_main, self.cfg.d_model), jnp.float32)
-        self.side_hidden = jnp.zeros((max_side, self.cfg.d_model), jnp.float32)
         self.history: list[dict] = []
+        self.stats = {
+            "ticks": 0, "tick_dispatches": 0, "aux_dispatches": 0,
+            "host_syncs": 0, "drains": 0,
+        }
+        self._pending = 0  # ticks since last drain (== device ring cursor)
 
         cfg = self.cfg
-        self._jit_prefill_main = jax.jit(
-            lambda p, toks, c: model_lib.prefill(p, cfg, {"tokens": toks}, c, spec=self.main_spec)
+        # Serving-dtype weights, cast ONCE (the per-dispatch cast_params
+        # inside decode becomes an identity XLA elides). The Prism's master
+        # copy stays authoritative for accounting/training.
+        self._params = model_lib.cast_params(prism.params, cfg)
+        d = cfg.d_model
+        M, S, R, P = n_main, max_side, self.sync_every, side_prompt_cap
+        self.state = TickState(
+            key=jax.random.key(seed, impl="rbg"),  # cheap per-tick key chain on CPU
+            cursor=jnp.zeros((), jnp.int32),
+            main_tok=jnp.zeros((M,), jnp.int32),
+            main_pos=jnp.zeros((M,), jnp.int32),
+            main_active=jnp.zeros((M,), bool),
+            main_hidden=jnp.zeros((M, d), jnp.float32),
+            main_ring=jnp.full((M, R), -1, jnp.int32),
+            main_caches=model_lib.init_caches(cfg, M, self.main_spec),
+            side_tok=jnp.zeros((S,), jnp.int32),
+            side_pos=jnp.zeros((S,), jnp.int32),
+            side_active=jnp.zeros((S,), bool),
+            side_step=jnp.zeros((S,), jnp.int32),
+            side_plen=jnp.zeros((S,), jnp.int32),
+            side_prompt=jnp.zeros((S, P), jnp.int32),
+            side_hidden=jnp.zeros((S, d), jnp.float32),
+            side_ring=jnp.full((S, R), -1, jnp.int32),
+            side_caches=model_lib.init_caches(cfg, S, self.side_spec),
         )
-        self._jit_decode_main = jax.jit(
-            lambda p, toks, pos, c: model_lib.decode_step(
-                p, cfg, {"tokens": toks, "positions": pos}, c, spec=self.main_spec
-            )
+
+        # Small stacks trace faster through lax.scan but *run* faster
+        # unrolled on CPU (no while-loop thunks, cross-layer fusion); deep
+        # stacks keep scan so HLO size stays depth-independent.
+        jcfg = dataclasses.replace(cfg, scan_layers=cfg.scan_layers and cfg.n_layers > 8)
+
+        # ONE fused dispatch per tick; the whole TickState is donated, so
+        # caches (the dominant buffers) update in place. The river-only
+        # variant is dispatched while no stream lane is live.
+        self._jit_tick = jax.jit(
+            partial(
+                fused_tick, cfg=jcfg, main_spec=self.main_spec,
+                side_spec=self.side_spec, sampling=self.sampling,
+            ),
+            donate_argnums=(1,),
         )
-        self._jit_decode_side = jax.jit(
-            lambda p, toks, pos, c: model_lib.decode_step(
-                p, cfg, {"tokens": toks, "positions": pos}, c, spec=self.side_spec
-            )
+        self._jit_tick_main_only = jax.jit(
+            partial(
+                fused_tick, cfg=jcfg, main_spec=self.main_spec,
+                side_spec=self.side_spec, sampling=self.sampling, step_sides=False,
+            ),
+            donate_argnums=(1,),
         )
-        self._jit_spawn = jax.jit(lambda c: spawn_caches(cfg, c, self.side_spec))
-        self._jit_encode = jax.jit(
-            lambda p, toks, vpos: injection.encode_thought_kv(p, cfg, toks, vpos)
+        self._jit_prefill_lane = jax.jit(
+            lambda p, toks, c, lane: model_lib.prefill_lane(
+                p, jcfg, {"tokens": toks}, c, lane, spec=self.main_spec
+            ),
+            donate_argnums=(2,),
         )
-        self._jit_inject = jax.jit(
-            lambda mc, tc, accept: injection.inject(cfg, mc, tc, accept)
+        self._jit_spawn = jax.jit(
+            partial(_spawn_lane, jcfg, self.side_spec), donate_argnums=(1,)
         )
+        self._jit_merge = jax.jit(
+            lambda p, mc, mh, toks, vpos, mask: injection.merge_thought(
+                p, jcfg, mc, mh, toks, vpos, mask, self.theta
+            ),
+            donate_argnums=(1,),
+        )
+        self._jit_admit_main = jax.jit(_admit_main_fields, donate_argnums=(0, 1, 2, 3))
+        self._jit_admit_side = jax.jit(_admit_side_fields, donate_argnums=(0, 1, 2, 3, 4, 5))
+        self._jit_retire_side = jax.jit(
+            lambda act_a, lane: act_a.at[lane].set(False), donate_argnums=(0,)
+        )
+
+    # -- legacy views over the device state --------------------------------
+    @property
+    def main_caches(self):
+        return self.state.main_caches
+
+    @property
+    def side_caches(self):
+        return self.state.side_caches
+
+    @property
+    def main_hidden(self):
+        return self.state.main_hidden
+
+    @property
+    def side_hidden(self):
+        return self.state.side_hidden
 
     # ------------------------------------------------------------------
-    def _next_key(self):
-        self._key, k = jax.random.split(self._key)
-        return k
-
     def submit(self, prompt: str, lane: int = 0):
-        """Start (or restart) a main agent on `lane` with `prompt`."""
+        """Start (or restart) a main agent on `lane` with `prompt`.
+
+        Prefills directly into the batched cache at `lane` (one dispatch,
+        donated caches — no gather/scatter round-trip of the full tree)."""
+        self.drain()  # align host mirrors to a window boundary
         ids = self.tok.encode(prompt, bos=True)
         toks = jnp.asarray([ids], jnp.int32)
-        # prefill writes lanes batched; run on a single-lane cache then copy in
-        lane_cache = jax.tree.map(lambda a: a[:, lane : lane + 1], self.main_caches)
-        logits, hidden, lane_cache = self._jit_prefill_main(self.prism.params, toks, lane_cache)
-        self.main_caches = jax.tree.map(
-            lambda full, part: full.at[:, lane : lane + 1].set(part), self.main_caches, lane_cache
+        logits, hidden, new_caches = self._jit_prefill_lane(
+            self._params, toks, self.state.main_caches, lane
         )
+        tok_a, pos_a, act_a, hid_a = self._jit_admit_main(
+            self.state.main_tok, self.state.main_pos, self.state.main_active,
+            self.state.main_hidden, lane, ids[-1], len(ids), hidden[0],
+        )
+        self.state = dataclasses.replace(
+            self.state, main_caches=new_caches,
+            main_tok=tok_a, main_pos=pos_a, main_active=act_a, main_hidden=hid_a,
+        )
+        self.stats["aux_dispatches"] += 2
         m = self.mains[lane]
         m.text, m.tokens = prompt, list(ids)
         m.position, m.active, m.steps = len(ids), True, 0
-        self.main_hidden = self.main_hidden.at[lane].set(hidden[0])
         self.prism.acquire(m.agent_id)
+        self.router.reset(m.agent_id)  # lane may be restarting
+        # triggers already present in the prompt spawn immediately
+        for tr in self.router.feed(m.agent_id, prompt):
+            if tr.kind == "task":
+                self._spawn_side(m, tr.payload)
         return m
 
     # ------------------------------------------------------------------
-    def _step_main(self):
-        active = [m for m in self.mains if m.active]
-        if not active:
+    def tick(self):
+        """One scheduler tick: exactly one jitted dispatch, no host sync.
+
+        Spawns/merges/router triggers are handled at drain boundaries —
+        every `sync_every` ticks. Side activity only changes at those
+        boundaries, so the host picks the right tick variant for free."""
+        self.stats["ticks"] += 1
+        if not any(m.active for m in self.mains) and not any(s.active for s in self.sides):
+            return  # idle engine: nothing to decode, nothing to drain
+        fn = self._jit_tick if any(s.active for s in self.sides) else self._jit_tick_main_only
+        self.state = fn(self._params, self.state)
+        self.stats["tick_dispatches"] += 1
+        self._pending += 1
+        if self._pending >= self.sync_every:
+            self.drain()
+
+    def run(self, n_ticks: int):
+        for _ in range(n_ticks):
+            self.tick()
+        self.drain()
+
+    # ------------------------------------------------------------------
+    def drain(self):
+        """Flush the device token rings to the host (ONE blocking transfer),
+        update agent views, and run the router/spawn/merge control plane."""
+        n = self._pending
+        if n == 0:
             return
-        toks = jnp.asarray([m.tokens[-1] if m.tokens else 0 for m in self.mains], jnp.int32)
-        pos = jnp.asarray([m.position for m in self.mains], jnp.int32)
-        logits, hidden, new_caches = self._jit_decode_main(
-            self.prism.params, toks, pos, self.main_caches
-        )
-        new_tok = sample(self._next_key(), logits, self.sampling)
-        new_tok_np = np.asarray(new_tok)
+        main_ring, side_ring = jax.device_get((self.state.main_ring, self.state.side_ring))
+        self.stats["host_syncs"] += 1
+        self.stats["drains"] += 1
+        self._pending = 0
+        self.state = dataclasses.replace(self.state, cursor=jnp.zeros((), jnp.int32))
+
+        # 1. rivers: append the window's tokens
+        main_chunks: dict[int, str] = {}
         for m in self.mains:
             if not m.active:
                 continue
-            t = int(new_tok_np[m.lane])
-            m.tokens.append(t)
-            m.text += self.tok.decode([t])
-            m.position += 1
-            m.steps += 1
-        self.main_caches = new_caches
-        self.main_hidden = hidden
+            toks = [int(t) for t in main_ring[m.lane, :n] if t >= 0]
+            chunk = self.tok.decode(toks)
+            m.tokens.extend(toks)
+            m.text += chunk
+            m.position += len(toks)
+            m.steps += len(toks)
+            main_chunks[m.lane] = chunk
+
+        # 2. streams: append, detect completion (trigger or step budget)
+        finished = []
+        for s in self.sides:
+            if not s.active:
+                continue
+            s.steps += n
+            s.position += n
+            raw = [int(t) for t in side_ring[s.lane, :n] if t >= 0]
+            allowed = max(0, self.side_max_steps - (len(s.tokens) - s.prompt_len))
+            raw = raw[:allowed]
+            s.tokens.extend(raw)
+            chunk = self.tok.decode(raw)
+            s.text += chunk
+            trig = [t for t in self.router.feed(s.agent_id, chunk) if t.kind in ("done", "answer")]
+            generated = len(s.tokens) - s.prompt_len
+            if trig or generated >= self.side_max_steps:
+                answer = next((t.payload for t in trig if t.kind == "answer"), None)
+                if answer is not None:
+                    thought = answer
+                elif trig:
+                    # feed() spans are absolute offsets into the generated
+                    # stream (== s.text): cut the free-running tokens the
+                    # lane produced between the trigger and this drain
+                    thought = s.text[: trig[0].span[1]]
+                else:
+                    thought = s.text
+                finished.append((s, thought))
+
+        # 3. merges (free lanes before new spawns claim them)
+        for s, thought in finished:
+            self._merge_side(s, thought)
+
+        # 4. river triggers spawn new streams
+        for m in self.mains:
+            if not m.active or m.lane not in main_chunks:
+                continue
+            for tr in self.router.feed(m.agent_id, main_chunks[m.lane]):
+                if tr.kind == "task":
+                    self._spawn_side(m, tr.payload)
 
     # ------------------------------------------------------------------
     def _free_side_lane(self) -> int:
@@ -211,76 +539,60 @@ class CortexEngine:
         lane = self._free_side_lane()
         if lane < 0:
             return None  # admission policy: drop when streams are saturated
-        compressed = self._jit_spawn(self.main_caches)
-        self.side_caches = _lane_write(self.side_caches, compressed, lane, parent.lane)
+        new_side_caches = self._jit_spawn(
+            self.state.main_caches, self.state.side_caches, parent.lane, lane
+        )
+        # keep the HEAD on overflow and close the frame: the '[TASK: ... ]'
+        # framing is what conditions the stream; an over-long task loses its
+        # tail, never its framing
+        ids = self.tok.encode(f"[TASK: {task}]")
+        truncated = len(ids) > self.side_prompt_cap
+        if truncated:
+            close = self.tok.encode("]")
+            ids = ids[: self.side_prompt_cap - len(close)] + close
+        padded = ids + [0] * (self.side_prompt_cap - len(ids))
+        prompt_a, plen_a, step_a, tok_a, pos_a, act_a = self._jit_admit_side(
+            self.state.side_prompt, self.state.side_plen, self.state.side_step,
+            self.state.side_tok, self.state.side_pos, self.state.side_active,
+            lane, jnp.asarray(padded, jnp.int32), len(ids), ids[-1], parent.position,
+        )
+        self.state = dataclasses.replace(
+            self.state, side_caches=new_side_caches, side_prompt=prompt_a,
+            side_plen=plen_a, side_step=step_a, side_tok=tok_a,
+            side_pos=pos_a, side_active=act_a,
+        )
+        self.stats["aux_dispatches"] += 2
         s = self.sides[lane]
         s.task, s.text = task, ""
         s.parent_lane = parent.lane
-        s.tokens = self.tok.encode(f"[TASK: {task}]")
+        s.tokens = list(ids)
         s.position = parent.position  # continues the stream's positional frame
         s.active, s.steps = True, 0
-        s.pending_prompt = list(s.tokens)  # teacher-forced before free generation
-        s.prompt_len = len(s.tokens)
+        s.prompt_len = len(ids)
         self.prism.acquire(s.agent_id)
-        self.history.append({"event": "spawn", "agent": s.agent_id, "task": task})
-        return s
-
-    def _step_sides(self):
-        if not any(s.active for s in self.sides):
-            return
-        toks, pos = [], []
-        for s in self.sides:
-            if s.active and getattr(s, "pending_prompt", None):
-                toks.append(s.pending_prompt.pop(0))
-            elif s.active and s.tokens:
-                toks.append(s.tokens[-1])
-            else:
-                toks.append(0)
-            pos.append(s.position if s.active else 0)
-        logits, hidden, new_caches = self._jit_decode_side(
-            self.prism.params,
-            jnp.asarray(toks, jnp.int32),
-            jnp.asarray(pos, jnp.int32),
-            self.side_caches,
+        self.history.append(
+            {"event": "spawn", "agent": s.agent_id, "task": task, "task_truncated": truncated}
         )
-        new_tok = np.asarray(sample(self._next_key(), logits, self.sampling))
-        self.side_caches = new_caches
-        self.side_hidden = hidden
-        finished = []
-        for s in self.sides:
-            if not s.active:
-                continue
-            s.position += 1
-            s.steps += 1
-            if s.pending_prompt:
-                continue  # still consuming the task prompt
-            t = int(new_tok[s.lane])
-            s.tokens.append(t)
-            s.text += self.tok.decode([t])
-            trig = [tr for tr in self.router.scan(s.agent_id, s.text) if tr.kind in ("done", "answer")]
-            generated = s.steps - getattr(s, "prompt_len", 0)
-            if trig or generated >= self.side_max_steps:
-                finished.append((s, next((tr.payload for tr in trig if tr.kind == "answer"), s.text)))
-        for s, thought in finished:
-            self._merge_side(s, thought)
+        return s
 
     # ------------------------------------------------------------------
     def _merge_side(self, s: AgentView, thought: str):
-        parent = self.mains[s.parent_lane]
-        ids = self.tok.encode(thought)[-self.inject_tokens :]
+        ids = self.tok.encode(thought)[-self.inject_tokens:]
         ids = ids + [self.tok.pad_id] * (self.inject_tokens - len(ids))
         toks = jnp.tile(jnp.asarray(ids, jnp.int32)[None], (self.n_main, 1))
         vpos = jnp.asarray([m.position for m in self.mains], jnp.int32)  # virtual index
-        thought_caches, t_hidden = self._jit_encode(self.prism.params, toks, vpos)
-        accept_vec, score = gate_lib.validate(
-            self.main_hidden, t_hidden, self.theta
-        )
         lane_mask = jnp.arange(self.n_main) == s.parent_lane
-        accept = accept_vec & lane_mask
-        accepted = bool(np.asarray(accept)[s.parent_lane])
-        if accepted:
-            self.main_caches = self._jit_inject(self.main_caches, thought_caches, accept)
-            parent.position += 0  # stream positions untouched (referential)
+        new_caches, accept, score = self._jit_merge(
+            self._params, self.state.main_caches, self.state.main_hidden,
+            toks, vpos, lane_mask,
+        )
+        act_a = self._jit_retire_side(self.state.side_active, s.lane)
+        self.state = dataclasses.replace(
+            self.state, main_caches=new_caches, side_active=act_a
+        )
+        self.stats["aux_dispatches"] += 2
+        accepted = bool(np.asarray(accept)[s.parent_lane])  # drain-time sync
+        self.stats["host_syncs"] += 1
         self.history.append(
             {
                 "event": "merge",
@@ -295,28 +607,24 @@ class CortexEngine:
         s.active = False
 
     # ------------------------------------------------------------------
-    def tick(self):
-        """One scheduler tick: river step, router scan, stream step."""
-        self._step_main()
-        for m in self.mains:
-            if not m.active:
-                continue
-            for tr in self.router.scan(m.agent_id, m.text):
-                if tr.kind == "task":
-                    self._spawn_side(m, tr.payload)
-        self._step_sides()
-
-    def run(self, n_ticks: int):
-        for _ in range(n_ticks):
-            self.tick()
-
-    # ------------------------------------------------------------------
     def memory_report(self) -> dict:
+        self.drain()  # lazy flush: reporting is a natural sync boundary
         per_agent = {}
         for m in self.mains:
             if m.active:
-                per_agent[m.agent_id] = tree_bytes(_lane_slice(self.main_caches, m.lane))
+                per_agent[m.agent_id] = tree_bytes(_lane_slice(self.state.main_caches, m.lane))
         for s in self.sides:
             if s.active:
-                per_agent[s.agent_id] = tree_bytes(_lane_slice(self.side_caches, s.lane))
-        return self.prism.memory_report(per_agent)
+                per_agent[s.agent_id] = tree_bytes(_lane_slice(self.state.side_caches, s.lane))
+        rep = self.prism.memory_report(per_agent)
+        # the serving-dtype weight cast is a REAL resident copy on backends
+        # where compute dtype != param dtype (identity casts alias, cost 0);
+        # Eq. 1 accounting must include it
+        cast_extra = sum(
+            b.size * b.dtype.itemsize
+            for a, b in zip(jax.tree.leaves(self.prism.params), jax.tree.leaves(self._params))
+            if b is not a
+        )
+        rep["serving_weight_bytes"] = cast_extra
+        rep["total_bytes"] += cast_extra
+        return rep

@@ -20,6 +20,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import gate as gate_lib
 from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
@@ -129,6 +130,34 @@ def blend_state(main_state, thought_state, accept, beta: float = 0.3):
         blended = (1.0 - beta) * m.astype(jnp.float32) + beta * t.astype(jnp.float32)
         return jnp.where(acc, blended.astype(m.dtype), m)
     return jax.tree.map(mix, main_state, thought_state)
+
+
+def merge_thought(
+    params,
+    cfg: ModelConfig,
+    main_caches,
+    main_hidden,
+    thought_tokens,
+    virtual_pos,
+    lane_mask,
+    theta: float,
+    beta: float = 0.3,
+):
+    """Encode + Validation Gate + Referential Injection as ONE fused step.
+
+    The legacy merge path issued three dispatches (encode_thought_kv, gate,
+    inject); fused, a merge costs a single drain-time dispatch with the main
+    caches donated. Note the gate decision is a traced value, so the thought
+    prefill and the masked inject are always computed — a rejected merge is
+    cheaper in dispatches, not in FLOPs (a host-side early-out would need
+    the gate score synced back first).
+    Returns (new_main_caches, accept [B] bool, score [B] f32).
+    """
+    thought_caches, t_hidden = encode_thought_kv(params, cfg, thought_tokens, virtual_pos)
+    accept_vec, score = gate_lib.validate(main_hidden, t_hidden, theta)
+    accept = accept_vec & lane_mask
+    new_caches = inject(cfg, main_caches, thought_caches, accept, beta)
+    return new_caches, accept, score
 
 
 def inject(cfg: ModelConfig, main_caches, thought_caches, accept, beta: float = 0.3):

@@ -23,28 +23,48 @@ class Trigger:
 
 
 class CortexRouter:
-    """Incremental scanner: feed decoded text, get new triggers exactly once."""
+    """Incremental scanner: feed decoded text, get new triggers exactly once.
+
+    Two APIs: :meth:`scan` takes the agent's FULL text each call (legacy);
+    :meth:`feed` takes only the newly drained chunk and keeps a bounded
+    overlap tail internally, so the per-drain cost is O(len(chunk))
+    regardless of stream length — the fused engine's control-plane path.
+    """
+
+    _TAIL = 256  # overlap kept so tags split across drain boundaries match
 
     def __init__(self):
         self._scanned = {}
+        self._tails = {}  # agent_id -> (tail_text, absolute_offset_of_tail)
 
-    def scan(self, agent_id: str, text: str) -> list[Trigger]:
-        start = self._scanned.get(agent_id, 0)
-        # rescan a small overlap so split tags across chunk boundaries match
-        window_start = max(0, start - 256)
+    def feed(self, agent_id: str, chunk: str) -> list[Trigger]:
+        """Scan a newly drained chunk against the retained tail. Trigger
+        spans are absolute offsets into the agent's full stream."""
+        tail, base = self._tails.get(agent_id, ("", 0))
+        text = tail + chunk
+        scanned = self._scanned.get(agent_id, 0)
         triggers: list[Trigger] = []
-        for m in TASK_RE.finditer(text, window_start):
-            if m.end() > start:
-                triggers.append(Trigger("task", m.group(1).strip(), m.span()))
-        for m in DONE_RE.finditer(text, window_start):
-            if m.end() > start:
-                triggers.append(Trigger("done", "", m.span()))
-        for m in ANSWER_RE.finditer(text, window_start):
-            if m.end() > start:
-                triggers.append(Trigger("answer", m.group(1).strip(), m.span()))
-        self._scanned[agent_id] = len(text)
+        for regex, kind, payload in (
+            (TASK_RE, "task", True), (DONE_RE, "done", False), (ANSWER_RE, "answer", True),
+        ):
+            for m in regex.finditer(text):
+                if base + m.end() > scanned:
+                    triggers.append(
+                        Trigger(kind, m.group(1).strip() if payload else "",
+                                (base + m.start(), base + m.end()))
+                    )
+        end = base + len(text)
+        self._scanned[agent_id] = end
+        keep = min(len(text), self._TAIL)
+        self._tails[agent_id] = (text[len(text) - keep:], end - keep)
         triggers.sort(key=lambda t: t.span)
         return triggers
 
+    def scan(self, agent_id: str, text: str) -> list[Trigger]:
+        """Full-text convenience wrapper: feeds only the unseen suffix."""
+        seen = self._scanned.get(agent_id, 0)
+        return self.feed(agent_id, text[min(seen, len(text)):])
+
     def reset(self, agent_id: str):
         self._scanned.pop(agent_id, None)
+        self._tails.pop(agent_id, None)

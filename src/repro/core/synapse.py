@@ -41,6 +41,11 @@ class SynapsePolicy:
     alpha: float = 0.5        # density vs coverage blend
     score_ema: float = 0.99   # per-step decay of accumulated attention mass
     coverage_cap: float = 4.0 # maxmin distances saturate here (normalized units)
+    # decode attend implementation: "pallas" = fused kernels.ops.synapse_attention
+    # over the concatenated [landmarks; window; inject] set (single device,
+    # interpret mode on CPU); "piece" = synapse_sharded.piece_attend (the
+    # multi-chip flash-decode). A live shard axis always forces "piece".
+    attend_impl: str = "pallas"
 
 
 # ---------------------------------------------------------------------------
@@ -65,6 +70,43 @@ def attention_density(q, keys, valid):
     """
     _, mass = decode_attend(q, keys, jnp.zeros_like(keys), valid)
     return mass
+
+
+def kernel_density(q, keys, valid):
+    """attention_density via kernels.ops.landmark_score: one fused sweep over
+    the cache computes the per-head logits (the bandwidth-bound half); the
+    valid-masked softmax normalization is a cheap [B,H,T] reduction. Falls
+    back to the jnp path when a shard axis is live (Pallas blocks are not
+    GSPMD-partitionable)."""
+    from repro.kernels import ops  # deferred: kernels are optional at import
+
+    if sharded.get_shard_axis() is not None:
+        return attention_density(q, keys, valid)
+    density, _ = ops.landmark_score(q, keys, None, valid)  # density-only sweep
+    return density
+
+
+def _attend(q1, pieces, valids, scale, policy: SynapsePolicy):
+    """Attend over [landmarks; window; inject] k/v pieces.
+
+    Default: ONE fused Pallas kernel (kernels.ops.synapse_attention) over the
+    concatenated token set — the synapse buffers are read exactly once per
+    step. Fallback: synapse_sharded.piece_attend when the token dim is
+    sharded across chips (or policy.attend_impl == "piece").
+    Returns (out [B,H,D], masses — one [B,T_i] per piece).
+    """
+    if policy.attend_impl == "piece" or sharded.get_shard_axis() is not None:
+        return sharded.piece_attend(q1, pieces, valids, scale)
+    from repro.kernels import ops
+
+    sizes = [k.shape[1] for k, _ in pieces]
+    k_all = jnp.concatenate([k for k, _ in pieces], axis=1)
+    v_all = jnp.concatenate([v for _, v in pieces], axis=1)
+    valid_all = jnp.concatenate(list(valids), axis=1)
+    out, mass = ops.synapse_attention(q1, k_all, v_all, valid_all, scale=scale)
+    splits = [sum(sizes[: i + 1]) for i in range(len(sizes) - 1)]
+    masses = jnp.split(mass, splits, axis=1)
+    return out, list(masses)
 
 
 # ---------------------------------------------------------------------------
@@ -120,7 +162,7 @@ def compress(
     B, T = cache.pos.shape
     slots = jnp.arange(T)
     valid = slots[None, :] < cache.length[:, None]
-    density = attention_density(query, cache.k, valid) if query is not None else cache.score
+    density = kernel_density(query, cache.k, valid) if query is not None else cache.score
     idx, score, picked = select_landmarks(cache.k, valid, density, n_landmarks, policy)
     # stable order: sort landmarks by original position; invalid picks last
     pos_sel = jnp.take_along_axis(cache.pos, idx, axis=1)
@@ -242,17 +284,19 @@ def synapse_decode(
     win_score = sharded.onehot_write(cache.win_score, slot, jnp.zeros((B,), jnp.float32))
 
     # ---- 3. attend over [landmarks; window; inject] ----
-    # flash-decode over token-sharded pieces: only [B,Hkv,G] softmax stats
-    # cross chips (shard_map psum) instead of f32 copies of the buffers.
+    # default: one fused Pallas pass over the concatenated token set (the
+    # buffers leave HBM exactly once per step); sharded runs flash-decode
+    # over token-sharded pieces, crossing chips with [B,Hkv,G] stats only.
     lm_valid = jnp.arange(K)[None, :] < lm_count[:, None]
     win_valid = jnp.arange(W)[None, :] < jnp.minimum(cache.win_count + 1, W)[:, None]
     inj_valid = jnp.arange(J)[None, :] < cache.inj_count[:, None]
     scale = 1.0 / (q1.shape[-1] ** 0.5)
-    out, masses = sharded.piece_attend(
+    out, masses = _attend(
         q1,
         [(lm_k, lm_v), (win_k, win_v), (cache.inj_k, cache.inj_v)],
         [lm_valid, win_valid, inj_valid],
         scale,
+        policy,
     )
     y = out.reshape(B, -1) @ attn_params["wo"]
 

@@ -20,12 +20,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(q_ref, k_ref, lm_ref, logits_ref, dist_ref, *, scale: float, hkv: int, true_d: int):
+def _kernel(q_ref, k_ref, lm_ref, logits_ref, *maybe_dist_ref, scale: float, hkv: int, true_d: int, with_dist: bool):
     # q_ref:  [H, D]; k_ref: [blkT, Hkv*D]; lm_ref: [Kc, D]
-    # logits_ref: [H, blkT]; dist_ref: [blkT]
+    # logits_ref: [H, blkT]; dist_ref: [blkT] (absent when not with_dist)
     q = q_ref[...].astype(jnp.float32)            # [H, D]
     kflat = k_ref[...].astype(jnp.float32)        # [blkT, Hkv*D]
-    lm = lm_ref[...].astype(jnp.float32)          # [Kc, D]
     blk_t = kflat.shape[0]
     d = q.shape[1]
     h = q.shape[0]
@@ -41,7 +40,11 @@ def _kernel(q_ref, k_ref, lm_ref, logits_ref, dist_ref, *, scale: float, hkv: in
     )  # [Hkv, G, blkT]
     logits_ref[...] = (s.reshape(h, blk_t) * scale).astype(logits_ref.dtype)
 
+    if not with_dist:
+        return
+    dist_ref = maybe_dist_ref[0]
     # coverage term: min_j || mean_kv(k_t) - lm_j || / sqrt(d)
+    lm = lm_ref[...].astype(jnp.float32)          # [Kc, D]
     pooled = jnp.mean(k, axis=1)  # [blkT, D]
     k2 = jnp.sum(pooled * pooled, axis=-1, keepdims=True)        # [blkT, 1]
     l2 = jnp.sum(lm * lm, axis=-1)[None, :]                      # [1, Kc]
@@ -52,36 +55,40 @@ def _kernel(q_ref, k_ref, lm_ref, logits_ref, dist_ref, *, scale: float, hkv: in
     dist_ref[...] = jnp.sqrt(jnp.min(d2, axis=-1) / true_d).astype(dist_ref.dtype)
 
 
-def landmark_score(q, keys, landmarks, *, scale: float | None = None, true_d: int | None = None, block_t: int = 512, interpret: bool = False):
-    """q: [B, H, D]; keys: [B, T, Hkv, D]; landmarks: [B, Kc, D] (pooled).
+def landmark_score(q, keys, landmarks=None, *, scale: float | None = None, true_d: int | None = None, block_t: int = 512, interpret: bool = False):
+    """q: [B, H, D]; keys: [B, T, Hkv, D]; landmarks: [B, Kc, D] (pooled),
+    or None for the density-only sweep (the coverage block is skipped).
 
     Returns (logits [B, H, T] f32 — pre-softmax density logits,
-             min_dist [B, T] f32 — normalized distance to landmark set).
+             min_dist [B, T] f32 — normalized distance to landmark set, or
+             None when landmarks is None).
     T must be a multiple of block_t; D multiple of 128 (ops.py pads).
     """
     B, H, D = q.shape
     T, Hkv = keys.shape[1], keys.shape[2]
+    with_dist = landmarks is not None
+    if not with_dist:
+        landmarks = jnp.zeros((B, 1, D), q.dtype)  # placeholder operand, unread
     Kc = landmarks.shape[1]
     scale = (1.0 / (D ** 0.5)) if scale is None else scale
     true_d = D if true_d is None else true_d
     kflat = keys.reshape(B, T, Hkv * D)
     grid = (B, T // block_t)
-    logits, dist = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, hkv=Hkv, true_d=true_d),
+    out_specs = [pl.BlockSpec((None, H, block_t), lambda b, t: (b, 0, t))]
+    out_shape = [jax.ShapeDtypeStruct((B, H, T), jnp.float32)]
+    if with_dist:
+        out_specs.append(pl.BlockSpec((None, block_t), lambda b, t: (b, t)))
+        out_shape.append(jax.ShapeDtypeStruct((B, T), jnp.float32))
+    res = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, hkv=Hkv, true_d=true_d, with_dist=with_dist),
         grid=grid,
         in_specs=[
             pl.BlockSpec((None, H, D), lambda b, t: (b, 0, 0)),
             pl.BlockSpec((None, block_t, Hkv * D), lambda b, t: (b, t, 0)),
             pl.BlockSpec((None, Kc, D), lambda b, t: (b, 0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((None, H, block_t), lambda b, t: (b, 0, t)),
-            pl.BlockSpec((None, block_t), lambda b, t: (b, t)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, H, T), jnp.float32),
-            jax.ShapeDtypeStruct((B, T), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(q, kflat, landmarks)
-    return logits, dist
+    return (res[0], res[1]) if with_dist else (res[0], None)

@@ -16,6 +16,8 @@ from repro.kernels import landmark_score as _ls
 from repro.kernels import synapse_attention as _sa
 
 INTERPRET = jax.default_backend() != "tpu"
+# finite mask shared with the kernels: keeps all-invalid rows NaN-free
+NEG_INF = _sa.NEG_INF
 
 
 def _pad_to(x, axis: int, mult: int, value=0.0):
@@ -28,37 +30,56 @@ def _pad_to(x, axis: int, mult: int, value=0.0):
     return jnp.pad(x, widths, constant_values=value)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def synapse_attention(q, keys, values, valid, *, interpret: bool | None = None):
-    """Padded/aligned wrapper. q [B,H,D]; keys/values [B,T,Hkv,D]; valid [B,T]."""
+@partial(jax.jit, static_argnames=("interpret", "scale"))
+def synapse_attention(q, keys, values, valid, *, scale: float | None = None, interpret: bool | None = None):
+    """Padded/aligned wrapper. q [B,H,D]; keys/values [B,T,Hkv,D]; valid [B,T].
+    ``scale`` defaults to 1/sqrt(D of q).
+
+    Tile alignment only matters for the compiled Mosaic path; under
+    interpret mode padding just multiplies the emulated kernel's work (and
+    materializes pad/slice ops), so the CPU path runs the true shapes.
+    """
     interpret = INTERPRET if interpret is None else interpret
     B, H, D = q.shape
     T = keys.shape[1]
+    scale = 1.0 / (D ** 0.5) if scale is None else scale
+    if interpret:
+        return _sa.synapse_attention(q, keys, values, valid, scale=scale, interpret=True)
     qp = _pad_to(q, 2, 128)
     kp = _pad_to(_pad_to(keys, 3, 128), 1, 128)
     vp = _pad_to(_pad_to(values, 3, 128), 1, 128)
     validp = _pad_to(valid, 1, 128, value=False)
-    out, mass = _sa.synapse_attention(
-        qp, kp, vp, validp, scale=1.0 / (D ** 0.5), interpret=interpret
-    )
+    out, mass = _sa.synapse_attention(qp, kp, vp, validp, scale=scale, interpret=False)
     return out[:, :, :D], mass[:, :T]
 
 
 @partial(jax.jit, static_argnames=("interpret", "block_t"))
-def landmark_score(q, keys, landmarks, *, block_t: int = 512, interpret: bool | None = None):
+def landmark_score(q, keys, landmarks=None, valid=None, *, block_t: int = 512, interpret: bool | None = None):
     """Returns (density [B,T] — per-head softmax mass summed over heads,
-    min_dist [B,T]). Handles padding; softmax normalization over the true T."""
+    min_dist [B,T] — or None when ``landmarks`` is None: the coverage block
+    of the kernel is skipped for density-only sweeps). Handles padding;
+    softmax normalization over the true T. ``valid`` ([B,T] bool, optional)
+    restricts the softmax to valid keys — the per-head normalizers only
+    count the live prefix of the cache."""
     interpret = INTERPRET if interpret is None else interpret
     B, H, D = q.shape
     T = keys.shape[1]
-    block_t = min(block_t, max(128, ((T + 127) // 128) * 128))
-    qp = _pad_to(q, 2, 128)
-    kp = _pad_to(_pad_to(keys, 3, 128), 1, block_t)
-    lmp = _pad_to(landmarks, 2, 128)
-    logits, dist = _ls.landmark_score(
-        qp, kp, lmp, scale=1.0 / (D ** 0.5), true_d=D, block_t=block_t, interpret=interpret
-    )
-    logits = logits[:, :, :T]
-    dist = dist[:, :T]
+    if interpret:
+        # no tile alignment needed when emulating: one block over the true T
+        logits, dist = _ls.landmark_score(
+            q, keys, landmarks, scale=1.0 / (D ** 0.5), true_d=D, block_t=T, interpret=True
+        )
+    else:
+        block_t = min(block_t, max(128, ((T + 127) // 128) * 128))
+        qp = _pad_to(q, 2, 128)
+        kp = _pad_to(_pad_to(keys, 3, 128), 1, block_t)
+        lmp = None if landmarks is None else _pad_to(landmarks, 2, 128)
+        logits, dist = _ls.landmark_score(
+            qp, kp, lmp, scale=1.0 / (D ** 0.5), true_d=D, block_t=block_t, interpret=False
+        )
+        logits = logits[:, :, :T]
+        dist = None if dist is None else dist[:, :T]
+    if valid is not None:
+        logits = jnp.where(valid[:, None, :], logits, NEG_INF)
     density = jax.nn.softmax(logits, axis=-1).sum(axis=1)  # paper: sum_h softmax_h
     return density, dist

@@ -23,6 +23,33 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+def _kernel_batched(q_ref, k_ref, v_ref, valid_ref, o_ref, mass_ref, *, scale: float):
+    # Fat-block variant: the whole (B*Hkv) batch lives in ONE program.
+    # q_ref:    [BB, G, D]; k_ref/v_ref: [BB, T, D]; valid_ref: [BB, T] int8
+    # o_ref:    [BB, G, D]; mass_ref: [BB, T]
+    # Used in interpret mode (CPU), where per-program interpreter overhead
+    # dominates: grid (B, Hkv) costs ~B*Hkv program invocations, grid (1,)
+    # costs one. On TPU the per-(b,h) grid below keeps [T, D] tiles aligned.
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    valid = valid_ref[...] != 0
+
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    ) * scale  # [BB, G, T]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / denom
+    o = jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # [BB, G, D]
+    o_ref[...] = o.astype(o_ref.dtype)
+    mass_ref[...] = jnp.sum(p, axis=1).astype(mass_ref.dtype)
+
+
 def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, mass_ref, *, scale: float):
     # q_ref:    [G, D]      queries of this kv head's group
     # k_ref:    [T, D]      keys (one kv head)
@@ -50,20 +77,55 @@ def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, mass_ref, *, scale: float):
     mass_ref[...] = jnp.sum(p, axis=0).astype(mass_ref.dtype)
 
 
-def synapse_attention(q, keys, values, valid, *, scale: float | None = None, interpret: bool = False):
+def synapse_attention(
+    q, keys, values, valid, *, scale: float | None = None, interpret: bool = False,
+    batched: bool | None = None,
+):
     """q: [B, H, D]; keys/values: [B, T, Hkv, D]; valid: [B, T] bool.
 
     Returns (out [B, H, D], mass [B, T] f32). T and D must be multiples of
-    128 (pad via ops.py wrapper).
+    128 (pad via ops.py wrapper). ``batched`` collapses the (B, Hkv) grid
+    into one program — the default under interpret mode, where per-program
+    overhead dominates the tiny decode shapes.
     """
     B, H, D = q.shape
     T, Hkv = keys.shape[1], keys.shape[2]
     G = H // Hkv
     scale = (1.0 / (D ** 0.5)) if scale is None else scale
+    batched = interpret if batched is None else batched
     qg = q.reshape(B, Hkv, G, D)
     kt = keys.swapaxes(1, 2)  # [B, Hkv, T, D]
     vt = values.swapaxes(1, 2)
     valid8 = valid.astype(jnp.int8)
+
+    if batched:
+        BB = B * Hkv
+        qb = qg.swapaxes(1, 0).reshape(BB, G, D)      # [Hkv*B, G, D]
+        kb = kt.swapaxes(1, 0).reshape(BB, T, D)
+        vb = vt.swapaxes(1, 0).reshape(BB, T, D)
+        validb = jnp.tile(valid8, (Hkv, 1))           # [Hkv*B, T]
+        out, mass = pl.pallas_call(
+            functools.partial(_kernel_batched, scale=scale),
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((BB, G, D), lambda i: (0, 0, 0)),
+                pl.BlockSpec((BB, T, D), lambda i: (0, 0, 0)),
+                pl.BlockSpec((BB, T, D), lambda i: (0, 0, 0)),
+                pl.BlockSpec((BB, T), lambda i: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((BB, G, D), lambda i: (0, 0, 0)),
+                pl.BlockSpec((BB, T), lambda i: (0, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((BB, G, D), q.dtype),
+                jax.ShapeDtypeStruct((BB, T), jnp.float32),
+            ],
+            interpret=interpret,
+        )(qb, kb, vb, validb)
+        out = out.reshape(Hkv, B, G, D).swapaxes(1, 0).reshape(B, H, D)
+        mass = mass.reshape(Hkv, B, T).sum(axis=0)
+        return out, mass
 
     grid = (B, Hkv)
     out, mass = pl.pallas_call(

@@ -453,6 +453,28 @@ def prefill(params, cfg: ModelConfig, inputs: dict, caches: ModelCaches, *, spec
     return logits, x_last, ModelCaches(groups=tuple(seg_caches), shared=shared_cache)
 
 
+def prefill_lane(params, cfg: ModelConfig, inputs: dict, caches: ModelCaches, lane, *, spec: CacheSpec, chunk: int = 1024):
+    """Prefill ONE lane of a batched cache, in place.
+
+    Runs the prompt through a fresh single-lane cache (allocated inside the
+    trace — fused away by XLA) and scatters the result into ``caches`` at
+    batch index ``lane`` (a traced scalar: one compilation serves all lanes).
+    Jit this with the batched caches donated and admission costs one dispatch
+    and zero extra cache copies — the engine's continuous-batching admit path.
+    Returns (logits_last [1,V], hidden_last [1,d], updated caches).
+    """
+    lane_caches = init_caches(cfg, 1, spec)
+    logits, hidden, lane_caches = prefill(params, cfg, inputs, lane_caches, spec=spec, chunk=chunk)
+    new_caches = jax.tree.map(
+        lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+            full, part.astype(full.dtype), lane, axis=1
+        ),
+        caches,
+        lane_caches,
+    )
+    return logits, hidden, new_caches
+
+
 def _last_query(block_params, cfg: ModelConfig, x_in, positions, lora_idx=None):
     """Recompute the last position's rotated query [B,H,D] (cheap: one token).
 

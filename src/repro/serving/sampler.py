@@ -16,10 +16,16 @@ class SamplingParams:
 
 
 def sample(key, logits, params: SamplingParams):
-    """logits: [B, V] -> tokens [B] int32."""
+    """logits: [B, V] -> tokens [B] int32.
+
+    Runs inside the engine's fused tick, so every branch is resolved at
+    trace time from the (static) params — the common temperature=1.0 path
+    lowers to a single categorical with no extra ops.
+    """
     if params.greedy or params.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / jnp.maximum(params.temperature, 1e-6)
+    if params.temperature != 1.0:
+        logits = logits / jnp.maximum(params.temperature, 1e-6)
     if params.top_k > 0:
         kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)

@@ -7,6 +7,27 @@ from repro.configs import get_config
 from repro.models import model as model_lib
 
 
+def hypothesis_tools():
+    """(given, settings, st) — real hypothesis when installed, else stubs
+    that mark only the property tests skipped so the plain tests in the
+    same module keep running (the container may lack hypothesis)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*a, **k):
+            return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        return given, settings, _Strategies()
+
+
 @pytest.fixture(autouse=True)
 def _no_act_sharding():
     # tests run on the single CPU device; disable launch-time constraints

@@ -6,7 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_tools
+
+given, settings, st = hypothesis_tools()  # stubs skip ONLY the property tests
 
 from repro.configs import get_config
 from repro.core import synapse as synapse_lib
