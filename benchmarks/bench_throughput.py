@@ -1,12 +1,13 @@
 """Paper §5.2 "Performance Characteristics": graceful degradation — main
 agent step latency as side agents scale.
 
-Post fused-tick engine: each tick is ONE jitted dispatch with donated
-caches; sampled tokens drain to the host every `sync_every` ticks. The
-numbers here are therefore dispatch-bound no longer — side agents ride the
-same fused step and the dominant cost is the (tiny, CPU-emulated) model
-itself. We report measured wall time per tick plus the engine's dispatch
-and host-sync counters so the perf trajectory is auditable across PRs.
+Post macro-tick engine: `run(n)` batches whole `sync_every` windows into
+single scanned dispatches, so the host re-enters XLA once per window — the
+numbers here amortize that dispatch over the window's virtual ticks. We
+report measured wall time per virtual tick plus the engine's dispatch and
+host-sync counters (`dispatches_per_tick` is the amortized 1/sync_every,
+`ticks_per_dispatch` the window length) so the perf trajectory is auditable
+across PRs.
 """
 from __future__ import annotations
 
@@ -23,7 +24,14 @@ from repro.models import model as model_lib
 from repro.serving.sampler import SamplingParams
 
 
-def run(side_counts=(0, 2, 4, 8), ticks: int = 16, warmup: int = 16, sync_every: int = 8) -> dict:
+def run(side_counts=(0, 2, 4, 8), ticks: int = 8, warmup: int = 16, sync_every: int = 8,
+        reps: int = 12) -> dict:
+    # best-of-reps over SINGLE-window chunks (timeit-style): the container
+    # shares 2 cores with other processes and contention alternates on a
+    # ~window timescale, so longer chunks always mix fast and slow windows;
+    # the minimum over many one-window runs (each including its drain)
+    # estimates the architecture's amortized latency, not the neighbors'
+    # load. ticks defaults to one sync_every window per timed chunk.
     cfg = get_config("qwen2.5-0.5b", reduced=True)
     params = model_lib.init_params(jax.random.key(0), cfg)
     tok = ByteTokenizer(cfg.vocab_size)
@@ -37,15 +45,18 @@ def run(side_counts=(0, 2, 4, 8), ticks: int = 16, warmup: int = 16, sync_every:
             sampling=SamplingParams(temperature=1.0), sync_every=sync_every,
         )
         eng.submit("benchmark prompt " + "[TASK: think] " * n_side, lane=0)
-        for _ in range(warmup):
-            eng.tick()  # warm the fused-tick jits + spawn sides + drain paths
+        eng.run(warmup)  # warm the macro/fused-tick jits + spawn + drain paths
         stats0 = dict(eng.stats)
-        t0 = time.perf_counter()
-        for _ in range(ticks):
-            eng.tick()
-        jax.block_until_ready(eng.state.main_ring)
-        dt = (time.perf_counter() - t0) / ticks
+        dt, total = float("inf"), 0.0
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            eng.run(ticks)  # ceil(ticks/sync_every) dispatches, incl. drains
+            jax.block_until_ready(eng.state.main_ring)
+            rep_dt = (time.perf_counter() - t0) / ticks
+            dt = min(dt, rep_dt)
+            total += rep_dt
         active_sides = sum(s.active for s in eng.sides)
+        dticks = eng.stats["ticks"] - stats0["ticks"]
         dispatches = eng.stats["tick_dispatches"] - stats0["tick_dispatches"]
         syncs = eng.stats["host_syncs"] - stats0["host_syncs"]
         if base is None:
@@ -53,15 +64,19 @@ def run(side_counts=(0, 2, 4, 8), ticks: int = 16, warmup: int = 16, sync_every:
         emit(
             f"throughput.sides_{n_side}",
             dt * 1e6,
-            f"active_sides={active_sides} slowdown={dt/base:.2f}x "
-            f"dispatches/tick={dispatches/ticks:.2f} syncs/tick={syncs/ticks:.2f}",
+            f"active_sides={active_sides} slowdown={dt/base:.2f}x mean={total/reps*1e6:.0f}us "
+            f"dispatches/tick={dispatches/dticks:.3f} ticks/dispatch={dticks/dispatches:.1f} "
+            f"syncs/tick={syncs/dticks:.3f}",
         )
         out["per_side"][n_side] = {
-            "tick_s": dt,
+            "tick_s": dt,            # best-of-reps (noise-robust headline)
+            "tick_s_mean": total / reps,  # mean incl. neighbor contention
             "slowdown": dt / base,
             "active": active_sides,
-            "dispatches_per_tick": dispatches / ticks,
-            "host_syncs_per_tick": syncs / ticks,
+            "dispatches_per_tick": dispatches / dticks,
+            "ticks_per_dispatch": dticks / dispatches,
+            "macro_dispatches": eng.stats["macro_dispatches"] - stats0["macro_dispatches"],
+            "host_syncs_per_tick": syncs / dticks,
         }
     return out
 

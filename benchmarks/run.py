@@ -3,11 +3,41 @@
 Prints ``name,us_per_call,derived`` CSV rows. Roofline/dry-run artifacts
 (benchmarks/artifacts/) are produced by launch/dryrun.py + launch/roofline.py
 (they need 512 host devices and run as separate processes).
+
+``--smoke`` runs one reduced throughput iteration (CI-sized: a couple of
+macro windows) and checks the macro-tick dispatch accounting without
+touching the recorded BENCH_throughput.json baseline.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+
+
+def smoke() -> dict:
+    """One reduced throughput iteration + the macro-tick dispatch-accounting
+    assertions. Single source of truth: tests/test_bench_smoke.py calls this
+    same function, so the CI script step and the pytest check cannot drift."""
+    from benchmarks import bench_throughput
+
+    out = bench_throughput.run(side_counts=(2,), ticks=4, warmup=4, sync_every=2)
+    res = out["per_side"][2]
+    assert res["tick_s"] > 0
+    assert res["active"] == 2
+    # macro engine: whole sync_every windows ride one scanned dispatch, so
+    # the amortized dispatch rate is exactly 1/sync_every...
+    assert res["dispatches_per_tick"] == 1.0 / out["sync_every"], res
+    # ...equivalently, each dispatch advances sync_every virtual ticks
+    assert res["ticks_per_dispatch"] == out["sync_every"], res
+    assert res["macro_dispatches"] >= 1
+    # drains every sync_every ticks -> at most 1/sync_every syncs per tick
+    assert res["host_syncs_per_tick"] <= 1.0 / out["sync_every"] + 1e-9
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    with open("benchmarks/artifacts/bench_smoke.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print("smoke,ok,macro-tick dispatch accounting verified")
+    return out
 
 
 def main() -> None:
@@ -42,4 +72,11 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    # support `python benchmarks/run.py` (CI) as well as `-m benchmarks.run`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced CI pass; no baseline rewrite")
+    args = ap.parse_args()
+    smoke() if args.smoke else main()

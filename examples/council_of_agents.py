@@ -34,20 +34,28 @@ def main():
         inject_tokens=8,
         theta=-1.0,  # untrained weights: accept all merges for the demo
         sampling=SamplingParams(temperature=1.0),
+        # per-lane sampling: freshly spawned streams explore by default...
+        side_sampling=SamplingParams(temperature=1.1, top_k=40),
+        sync_every=4,  # ...and whole 4-tick windows ride ONE scanned dispatch
     )
+    # ...while river 0 decodes greedily — per-lane params share the dispatch
     engine.submit(
         "Research question: why is the sky blue? [TASK: check Rayleigh scattering] "
         "Let me think step by step.",
         lane=0,
+        sampling=SamplingParams(greedy=True),
     )
     engine.submit("Second river: summarize the meeting notes. [TASK: list action items] ok", lane=1)
 
-    for tick in range(40):
-        engine.tick()
-        if tick % 10 == 9:
+    for window in range(10):  # 10 macro ticks == 40 virtual ticks
+        engine.macro_tick()
+        if window % 2 == 1:
             rep = engine.memory_report()
+            st = engine.stats
             print(
-                f"[tick {tick+1:3d}] agents={rep['n_agents']} "
+                f"[tick {st['ticks']:3d}] agents={rep['n_agents']} "
+                f"dispatches={st['tick_dispatches']} "
+                f"(ticks/dispatch={st['ticks']/max(st['tick_dispatches'],1):.1f}) "
                 f"weights={rep['weight_bytes']/1e6:.1f}MB "
                 f"ctx/agent={rep['context_bytes_per_agent']/1e6:.2f}MB "
                 f"total={rep['total_bytes']/1e6:.1f}MB "

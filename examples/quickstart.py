@@ -32,11 +32,23 @@ def main():
         params, cfg, tok, n_lanes=4, capacity=256,
         sampling=SamplingParams(temperature=0.9, top_k=40),
     )
+    # per-request sampling: greedy and exploratory requests batch into the
+    # same decode + shared sampling pass (per-lane temperature/top-k/top-p)
+    per_request = [
+        SamplingParams(greedy=True),
+        SamplingParams(temperature=0.7, top_k=20),
+        SamplingParams(temperature=1.2, top_p=0.9),
+        None,  # server default
+    ]
     for i in range(args.requests):
-        server.submit(f"request {i}: tell me something.", max_new_tokens=args.max_new_tokens)
+        server.submit(
+            f"request {i}: tell me something.", max_new_tokens=args.max_new_tokens,
+            sampling=per_request[i % len(per_request)],
+        )
     done = server.run_until_done()
     for r in done:
-        print(f"[req {r.rid}] {r.prompt!r} -> {r.text!r}")
+        mode = r.sampling or server.sampling
+        print(f"[req {r.rid}] ({mode}) {r.prompt!r} -> {r.text!r}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,15 @@ scheduler hot loop*:
   ticks (or lazily via :meth:`CortexEngine.drain` / ``memory_report``). The
   router scan, spawn, and merge logic run against the drained buffer at that
   boundary — host-side control at 1/sync_every the rate of device steps.
+* MACRO TICKS: since nothing leaves the device between drains, the whole
+  ``sync_every`` window is ONE dispatch — ``fused_tick(n_ticks=W)`` scans
+  the per-tick body over the window inside a single jitted, donated program,
+  emitting the token rings for the full window. :meth:`CortexEngine.run(n)`
+  therefore issues ``ceil(n / sync_every)`` dispatches instead of ``n``.
+* Per-lane sampling: temperature/top-k/top-p live as stacked device arrays
+  (:class:`repro.serving.sampler.LaneSampling`) inside ``TickState``, so a
+  greedy river can coexist with exploratory streams in the same dispatch and
+  admission-time changes never recompile the tick.
 * Side-agent prompts are teacher-forced from an on-device prompt buffer
   (``side_prompt``/``side_plen``/``side_step``), so a freshly spawned stream
   needs no host involvement until its next drain.
@@ -23,10 +32,14 @@ scheduler hot loop*:
   Validation Gate (§3.5) + Referential Injection (§3.6) fused into one
   dispatch (``injection.merge_thought``).
 
-Performance invariants (asserted by tests/test_fused_tick.py):
+Performance invariants (asserted by tests/test_fused_tick.py and
+tests/test_macro_tick.py):
   * ``tick()`` issues exactly ONE jitted dispatch;
+  * ``run(n)`` issues exactly ``ceil(n / sync_every)`` jitted dispatches;
   * no blocking host transfer happens outside ``drain()``;
-  * ``drain()`` performs exactly one device→host pull of the token rings.
+  * ``drain()`` performs exactly one device→host pull of the token rings;
+  * greedy lanes are bitwise identical between the scanned macro path and
+    the single-tick path, and unaffected by other lanes' sampling params.
 """
 from __future__ import annotations
 
@@ -43,10 +56,14 @@ from repro.core import synapse as synapse_lib
 from repro.core.prism import Prism, tree_bytes
 from repro.core.router import CortexRouter
 from repro.data.tokenizer import ByteTokenizer
+from repro.kernels.ops import ring_append
 from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
-from repro.serving.sampler import SamplingParams, sample
+from repro.serving.sampler import (
+    LaneSampling, SamplingParams, cat_lanes, lane_params, lane_values,
+    sample_lanes, static_flags,
+)
 
 
 def _lane_slice(tree, lane: int):
@@ -112,6 +129,7 @@ class TickState:
     main_active: jax.Array  # [M] bool
     main_hidden: jax.Array  # [M, d] f32 — gate input
     main_ring: jax.Array    # [M, R] int32 — sampled tokens awaiting drain (-1 = none)
+    main_samp: LaneSampling  # [M] per-lane temperature/top-k/top-p
     main_caches: model_lib.ModelCaches
     # stream lanes
     side_tok: jax.Array     # [S] int32
@@ -122,6 +140,7 @@ class TickState:
     side_prompt: jax.Array  # [S, P] int32 — on-device prompt buffer
     side_hidden: jax.Array  # [S, d] f32
     side_ring: jax.Array    # [S, R] int32
+    side_samp: LaneSampling  # [S] per-lane temperature/top-k/top-p
     side_caches: model_lib.ModelCaches
 
 
@@ -130,18 +149,19 @@ jax.tree_util.register_dataclass(
 )
 
 
-def fused_tick(
+def _one_tick(
     params,
     state: TickState,
     *,
     cfg: ModelConfig,
     main_spec: model_lib.CacheSpec,
     side_spec: model_lib.CacheSpec,
-    sampling: SamplingParams,
     step_sides: bool = True,
+    use_filters: bool = True,
+    any_greedy: bool = True,
 ) -> TickState:
     """One scheduler tick, entirely on device: main-lane decode, side-lane
-    decode (synapse caches, Pallas attend), sampling, ring-buffer append.
+    decode (synapse caches, Pallas attend), per-lane sampling, ring append.
 
     Inactive lanes decode garbage harmlessly (their cursors are frozen and
     their caches are fully rewritten on admission) — concurrency through
@@ -174,11 +194,18 @@ def fused_tick(
             params, cfg, {"tokens": in_tok, "positions": in_pos},
             state.side_caches, spec=side_spec,
         )
-        # one categorical over all lanes (one threefry chain per tick)
-        samp = sample(k_tick, jnp.concatenate([logits_m, logits_s], axis=0), sampling)
+        # one per-lane sampling pass over all lanes (one key chain per tick)
+        samp = sample_lanes(
+            k_tick, jnp.concatenate([logits_m, logits_s], axis=0),
+            cat_lanes(state.main_samp, state.side_samp),
+            use_filters=use_filters, any_greedy=any_greedy,
+        )
         samp_m, samp_s = samp[:M], samp[M:]
     else:
-        samp_m = sample(k_tick, logits_m, sampling)
+        samp_m = sample_lanes(
+            k_tick, logits_m, state.main_samp,
+            use_filters=use_filters, any_greedy=any_greedy,
+        )
 
     # river-lane state transition (shared by both variants)
     ring_m = jnp.where(m_act, samp_m, -1)
@@ -189,9 +216,7 @@ def fused_tick(
         main_tok=jnp.where(m_act, samp_m, state.main_tok),
         main_pos=state.main_pos + m_act.astype(jnp.int32),
         main_hidden=hidden_m.astype(jnp.float32),
-        main_ring=jax.lax.dynamic_update_slice(
-            state.main_ring, ring_m[:, None], (0, state.cursor)
-        ),
+        main_ring=ring_append(state.main_ring, ring_m, state.cursor),
         main_caches=main_caches,
     )
     if not step_sides:
@@ -205,11 +230,46 @@ def fused_tick(
         side_pos=state.side_pos + s_act.astype(jnp.int32),
         side_step=state.side_step + s_act.astype(jnp.int32),
         side_hidden=hidden_s.astype(jnp.float32),
-        side_ring=jax.lax.dynamic_update_slice(
-            state.side_ring, ring_s[:, None], (0, state.cursor)
-        ),
+        side_ring=ring_append(state.side_ring, ring_s, state.cursor),
         side_caches=side_caches,
     )
+
+
+def fused_tick(
+    params,
+    state: TickState,
+    *,
+    cfg: ModelConfig,
+    main_spec: model_lib.CacheSpec,
+    side_spec: model_lib.CacheSpec,
+    step_sides: bool = True,
+    use_filters: bool = True,
+    any_greedy: bool = True,
+    n_ticks: int = 1,
+) -> TickState:
+    """``n_ticks`` scheduler ticks in ONE device program.
+
+    ``n_ticks == 1`` is the classic fused tick. ``n_ticks > 1`` is the
+    macro tick: a ``jax.lax.scan`` of the per-tick body over the whole
+    ``sync_every`` window, so the host re-enters XLA once per window
+    instead of once per virtual tick. The PRNG key splits once per virtual
+    tick inside the scan — the exact chain of the single-tick path — so
+    token streams are bitwise identical regardless of how ticks are grouped
+    into dispatches. The ring cursor is part of the carry; the rings must
+    have capacity for ``state.cursor + n_ticks`` entries.
+    """
+    step = partial(
+        _one_tick, params, cfg=cfg, main_spec=main_spec, side_spec=side_spec,
+        step_sides=step_sides, use_filters=use_filters, any_greedy=any_greedy,
+    )
+    if n_ticks == 1:
+        return step(state)
+
+    def body(st, _):
+        return step(st), None
+
+    out, _ = jax.lax.scan(body, state, None, length=n_ticks)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -217,16 +277,17 @@ def fused_tick(
 # the small per-lane field arrays — never the cache trees, whose buffers may
 # already be donated to the prefill/spawn/merge dispatch of the same event.
 # ---------------------------------------------------------------------------
-def _admit_main_fields(tok_a, pos_a, act_a, hid_a, lane, tok, pos, hidden):
+def _admit_main_fields(tok_a, pos_a, act_a, hid_a, samp_a, lane, tok, pos, hidden, temp, tk, tp):
     return (
         tok_a.at[lane].set(tok),
         pos_a.at[lane].set(pos),
         act_a.at[lane].set(True),
         hid_a.at[lane].set(hidden.astype(hid_a.dtype)),
+        _set_lane_samp(samp_a, lane, temp, tk, tp),
     )
 
 
-def _admit_side_fields(prompt_a, plen_a, step_a, tok_a, pos_a, act_a, lane, prompt, plen, last_tok, pos):
+def _admit_side_fields(prompt_a, plen_a, step_a, tok_a, pos_a, act_a, samp_a, lane, prompt, plen, last_tok, pos, temp, tk, tp):
     return (
         prompt_a.at[lane].set(prompt),
         plen_a.at[lane].set(plen),
@@ -234,6 +295,15 @@ def _admit_side_fields(prompt_a, plen_a, step_a, tok_a, pos_a, act_a, lane, prom
         tok_a.at[lane].set(last_tok),
         pos_a.at[lane].set(pos),
         act_a.at[lane].set(True),
+        _set_lane_samp(samp_a, lane, temp, tk, tp),
+    )
+
+
+def _set_lane_samp(samp_a: LaneSampling, lane, temp, tk, tp) -> LaneSampling:
+    return LaneSampling(
+        temperature=samp_a.temperature.at[lane].set(temp),
+        top_k=samp_a.top_k.at[lane].set(tk),
+        top_p=samp_a.top_p.at[lane].set(tp),
     )
 
 
@@ -283,6 +353,7 @@ class CortexEngine:
         inject_tokens: int = 16,
         side_max_steps: int = 64,
         sampling: SamplingParams = SamplingParams(temperature=0.8),
+        side_sampling: SamplingParams | None = None,
         seed: int = 0,
         sync_every: int = 1,
         side_prompt_cap: int = 64,
@@ -299,13 +370,16 @@ class CortexEngine:
             cfg = dataclasses.replace(cfg, compute_dtype=compute_dtype)
         self.cfg = cfg
         self.tok = tokenizer
-        self.router = CortexRouter()
         self.theta = theta
         self.inject_tokens = inject_tokens
         self.side_max_steps = side_max_steps
         self.sampling = sampling
+        self.side_sampling = side_sampling if side_sampling is not None else sampling
         self.sync_every = max(1, sync_every)
         self.side_prompt_cap = side_prompt_cap
+        # macro windows mean bigger drain chunks: size the router's overlap
+        # tail so a tag split across window boundaries still matches
+        self.router = CortexRouter(tail=max(256, 8 * self.sync_every))
 
         self.main_spec = model_lib.CacheSpec(kind="full", capacity=main_capacity)
         self.side_spec = side_spec or model_lib.CacheSpec(
@@ -314,10 +388,15 @@ class CortexEngine:
         self.n_main, self.max_side = n_main, max_side
         self.mains = [AgentView(f"main{i}", i, "main") for i in range(n_main)]
         self.sides = [AgentView(f"side{i}", i, "side") for i in range(max_side)]
+        # host mirrors of the per-lane device sampling arrays: they pick the
+        # STATIC sampler fast path (skip the sort when no live lane filters,
+        # skip the argmax select when none is greedy) without device reads
+        self._main_sp: list[SamplingParams] = [self.sampling] * n_main
+        self._side_sp: list[SamplingParams] = [self.side_sampling] * max_side
         self.history: list[dict] = []
         self.stats = {
-            "ticks": 0, "tick_dispatches": 0, "aux_dispatches": 0,
-            "host_syncs": 0, "drains": 0,
+            "ticks": 0, "tick_dispatches": 0, "macro_dispatches": 0,
+            "aux_dispatches": 0, "host_syncs": 0, "drains": 0,
         }
         self._pending = 0  # ticks since last drain (== device ring cursor)
 
@@ -336,6 +415,7 @@ class CortexEngine:
             main_active=jnp.zeros((M,), bool),
             main_hidden=jnp.zeros((M, d), jnp.float32),
             main_ring=jnp.full((M, R), -1, jnp.int32),
+            main_samp=lane_params(self.sampling, M),
             main_caches=model_lib.init_caches(cfg, M, self.main_spec),
             side_tok=jnp.zeros((S,), jnp.int32),
             side_pos=jnp.zeros((S,), jnp.int32),
@@ -345,6 +425,7 @@ class CortexEngine:
             side_prompt=jnp.zeros((S, P), jnp.int32),
             side_hidden=jnp.zeros((S, d), jnp.float32),
             side_ring=jnp.full((S, R), -1, jnp.int32),
+            side_samp=lane_params(self.side_sampling, S),
             side_caches=model_lib.init_caches(cfg, S, self.side_spec),
         )
 
@@ -353,23 +434,14 @@ class CortexEngine:
         # stacks keep scan so HLO size stays depth-independent.
         jcfg = dataclasses.replace(cfg, scan_layers=cfg.scan_layers and cfg.n_layers > 8)
 
-        # ONE fused dispatch per tick; the whole TickState is donated, so
-        # caches (the dominant buffers) update in place. The river-only
-        # variant is dispatched while no stream lane is live.
-        self._jit_tick = jax.jit(
-            partial(
-                fused_tick, cfg=jcfg, main_spec=self.main_spec,
-                side_spec=self.side_spec, sampling=self.sampling,
-            ),
-            donate_argnums=(1,),
-        )
-        self._jit_tick_main_only = jax.jit(
-            partial(
-                fused_tick, cfg=jcfg, main_spec=self.main_spec,
-                side_spec=self.side_spec, sampling=self.sampling, step_sides=False,
-            ),
-            donate_argnums=(1,),
-        )
+        # ONE fused dispatch per tick (or per macro window: fused_tick with
+        # n_ticks > 1 scans the tick body); the whole TickState is donated,
+        # so caches (the dominant buffers) update in place. The river-only
+        # variant is dispatched while no stream lane is live. Window-length
+        # variants (full windows + the trailing partial window of a run)
+        # compile lazily, cached by (n_ticks, step_sides, sampler flags).
+        self._jcfg = jcfg
+        self._jit_macro: dict[tuple[int, bool, bool, bool], object] = {}
         self._jit_prefill_lane = jax.jit(
             lambda p, toks, c, lane: model_lib.prefill_lane(
                 p, jcfg, {"tokens": toks}, c, lane, spec=self.main_spec
@@ -385,11 +457,39 @@ class CortexEngine:
             ),
             donate_argnums=(1,),
         )
-        self._jit_admit_main = jax.jit(_admit_main_fields, donate_argnums=(0, 1, 2, 3))
-        self._jit_admit_side = jax.jit(_admit_side_fields, donate_argnums=(0, 1, 2, 3, 4, 5))
+        self._jit_admit_main = jax.jit(_admit_main_fields, donate_argnums=(0, 1, 2, 3, 4))
+        self._jit_admit_side = jax.jit(_admit_side_fields, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
         self._jit_retire_side = jax.jit(
             lambda act_a, lane: act_a.at[lane].set(False), donate_argnums=(0,)
         )
+
+    def _macro_fn(self, n_ticks: int, step_sides: bool, use_filters: bool, any_greedy: bool):
+        """Jitted fused_tick variant for an ``n_ticks``-long window."""
+        key = (n_ticks, step_sides, use_filters, any_greedy)
+        if key not in self._jit_macro:
+            self._jit_macro[key] = jax.jit(
+                partial(
+                    fused_tick, cfg=self._jcfg, main_spec=self.main_spec,
+                    side_spec=self.side_spec, step_sides=step_sides,
+                    use_filters=use_filters, any_greedy=any_greedy,
+                    n_ticks=n_ticks,
+                ),
+                donate_argnums=(1,),
+            )
+        return self._jit_macro[key]
+
+    def _sampler_flags(self, step_sides: bool) -> tuple[bool, bool]:
+        """(use_filters, any_greedy) over the lanes the dispatch samples.
+
+        Derived purely from the host mirrors, so the flags — and thus the
+        chosen program — only change when lane params or activity change,
+        which happens at drain boundaries: macro and single-tick paths pick
+        identical variants (stochastic draws differ bitwise between
+        variants, so this invariance is what keeps parity exact)."""
+        ps = [self._main_sp[m.lane] for m in self.mains if m.active]
+        if step_sides:
+            ps += [self._side_sp[s.lane] for s in self.sides if s.active]
+        return static_flags(ps)
 
     # -- legacy views over the device state --------------------------------
     @property
@@ -409,24 +509,29 @@ class CortexEngine:
         return self.state.side_hidden
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: str, lane: int = 0):
+    def submit(self, prompt: str, lane: int = 0, sampling: SamplingParams | None = None):
         """Start (or restart) a main agent on `lane` with `prompt`.
 
         Prefills directly into the batched cache at `lane` (one dispatch,
-        donated caches — no gather/scatter round-trip of the full tree)."""
+        donated caches — no gather/scatter round-trip of the full tree).
+        ``sampling`` overrides the engine default for THIS lane only (e.g. a
+        greedy river among exploratory lanes); restarting a lane resets it."""
         self.drain()  # align host mirrors to a window boundary
         ids = self.tok.encode(prompt, bos=True)
         toks = jnp.asarray([ids], jnp.int32)
         logits, hidden, new_caches = self._jit_prefill_lane(
             self._params, toks, self.state.main_caches, lane
         )
-        tok_a, pos_a, act_a, hid_a = self._jit_admit_main(
+        self._main_sp[lane] = sampling if sampling is not None else self.sampling
+        temp, tk, tp = lane_values(self._main_sp[lane])
+        tok_a, pos_a, act_a, hid_a, samp_a = self._jit_admit_main(
             self.state.main_tok, self.state.main_pos, self.state.main_active,
-            self.state.main_hidden, lane, ids[-1], len(ids), hidden[0],
+            self.state.main_hidden, self.state.main_samp,
+            lane, ids[-1], len(ids), hidden[0], temp, tk, tp,
         )
         self.state = dataclasses.replace(
-            self.state, main_caches=new_caches,
-            main_tok=tok_a, main_pos=pos_a, main_active=act_a, main_hidden=hid_a,
+            self.state, main_caches=new_caches, main_tok=tok_a, main_pos=pos_a,
+            main_active=act_a, main_hidden=hid_a, main_samp=samp_a,
         )
         self.stats["aux_dispatches"] += 2
         m = self.mains[lane]
@@ -441,25 +546,65 @@ class CortexEngine:
         return m
 
     # ------------------------------------------------------------------
+    def _any_active(self) -> bool:
+        return any(m.active for m in self.mains) or any(s.active for s in self.sides)
+
     def tick(self):
         """One scheduler tick: exactly one jitted dispatch, no host sync.
 
         Spawns/merges/router triggers are handled at drain boundaries —
         every `sync_every` ticks. Side activity only changes at those
         boundaries, so the host picks the right tick variant for free."""
-        self.stats["ticks"] += 1
-        if not any(m.active for m in self.mains) and not any(s.active for s in self.sides):
+        if not self._any_active():
+            self.stats["ticks"] += 1
             return  # idle engine: nothing to decode, nothing to drain
-        fn = self._jit_tick if any(s.active for s in self.sides) else self._jit_tick_main_only
-        self.state = fn(self._params, self.state)
-        self.stats["tick_dispatches"] += 1
-        self._pending += 1
+        self._dispatch_window(1)
         if self._pending >= self.sync_every:
             self.drain()
 
+    def macro_tick(self):
+        """One macro tick: `sync_every` virtual ticks in ONE jitted, donated
+        dispatch (a lax.scan over the fused tick body), then the window
+        drains. The device never syncs with the host inside the window."""
+        if not self._any_active():
+            self.stats["ticks"] += self.sync_every
+            return
+        if self._pending:
+            self.drain()  # align the ring cursor to a window boundary
+        self._dispatch_window(self.sync_every)
+        self.drain()
+
+    def _dispatch_window(self, n: int):
+        """Advance ``n <= sync_every - pending`` virtual ticks in one
+        dispatch. No drain, no host sync — callers close the window."""
+        assert self._pending + n <= self.sync_every
+        step_sides = any(s.active for s in self.sides)
+        fn = self._macro_fn(n, step_sides, *self._sampler_flags(step_sides))
+        self.state = fn(self._params, self.state)
+        self.stats["ticks"] += n
+        self.stats["tick_dispatches"] += 1
+        if n > 1:
+            self.stats["macro_dispatches"] += 1
+        self._pending += n
+
     def run(self, n_ticks: int):
-        for _ in range(n_ticks):
-            self.tick()
+        """Advance ``n_ticks`` virtual ticks in ``ceil(n_ticks/sync_every)``
+        dispatches (from a window boundary): full windows ride the scanned
+        macro tick, the trailing partial window is one shorter scan."""
+        remaining = n_ticks
+        while remaining > 0:
+            if not self._any_active():
+                self.stats["ticks"] += remaining
+                break
+            w = min(self.sync_every - self._pending, remaining)
+            if w <= 1:
+                self.tick()  # drains itself when the window closes
+                remaining -= 1
+                continue
+            self._dispatch_window(w)
+            remaining -= w
+            if self._pending >= self.sync_every:
+                self.drain()
         self.drain()
 
     # ------------------------------------------------------------------
@@ -535,7 +680,7 @@ class CortexEngine:
                 return s.lane
         return -1
 
-    def _spawn_side(self, parent: AgentView, task: str):
+    def _spawn_side(self, parent: AgentView, task: str, sampling: SamplingParams | None = None):
         lane = self._free_side_lane()
         if lane < 0:
             return None  # admission policy: drop when streams are saturated
@@ -551,15 +696,19 @@ class CortexEngine:
             close = self.tok.encode("]")
             ids = ids[: self.side_prompt_cap - len(close)] + close
         padded = ids + [0] * (self.side_prompt_cap - len(ids))
-        prompt_a, plen_a, step_a, tok_a, pos_a, act_a = self._jit_admit_side(
+        self._side_sp[lane] = sampling if sampling is not None else self.side_sampling
+        temp, tk, tp = lane_values(self._side_sp[lane])
+        prompt_a, plen_a, step_a, tok_a, pos_a, act_a, samp_a = self._jit_admit_side(
             self.state.side_prompt, self.state.side_plen, self.state.side_step,
             self.state.side_tok, self.state.side_pos, self.state.side_active,
+            self.state.side_samp,
             lane, jnp.asarray(padded, jnp.int32), len(ids), ids[-1], parent.position,
+            temp, tk, tp,
         )
         self.state = dataclasses.replace(
             self.state, side_caches=new_side_caches, side_prompt=prompt_a,
             side_plen=plen_a, side_step=step_a, side_tok=tok_a,
-            side_pos=pos_a, side_active=act_a,
+            side_pos=pos_a, side_active=act_a, side_samp=samp_a,
         )
         self.stats["aux_dispatches"] += 2
         s = self.sides[lane]
@@ -574,6 +723,22 @@ class CortexEngine:
             {"event": "spawn", "agent": s.agent_id, "task": task, "task_truncated": truncated}
         )
         return s
+
+    # ------------------------------------------------------------------
+    def retire_side(self, lane: int):
+        """Cancel a stream without merging its thought (drops the lane at the
+        next window boundary; its caches are rewritten on the next spawn)."""
+        s = self.sides[lane]
+        if not s.active:
+            return
+        self.drain()
+        act_a = self._jit_retire_side(self.state.side_active, lane)
+        self.state = dataclasses.replace(self.state, side_active=act_a)
+        self.stats["aux_dispatches"] += 1
+        self.router.reset(s.agent_id)
+        self.prism.release(s.agent_id)
+        s.active = False
+        self.history.append({"event": "retire", "agent": s.agent_id})
 
     # ------------------------------------------------------------------
     def _merge_side(self, s: AgentView, thought: str):

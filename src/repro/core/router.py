@@ -29,11 +29,15 @@ class CortexRouter:
     :meth:`feed` takes only the newly drained chunk and keeps a bounded
     overlap tail internally, so the per-drain cost is O(len(chunk))
     regardless of stream length — the fused engine's control-plane path.
+
+    ``tail`` is the overlap kept between feeds so tags split across drain
+    boundaries still match. The engine scales it with its macro-tick window
+    (one drain per ``sync_every`` virtual ticks feeds the whole window's
+    decoded text in a single chunk).
     """
 
-    _TAIL = 256  # overlap kept so tags split across drain boundaries match
-
-    def __init__(self):
+    def __init__(self, tail: int = 256):
+        self._tail = tail
         self._scanned = {}
         self._tails = {}  # agent_id -> (tail_text, absolute_offset_of_tail)
 
@@ -55,7 +59,7 @@ class CortexRouter:
                     )
         end = base + len(text)
         self._scanned[agent_id] = end
-        keep = min(len(text), self._TAIL)
+        keep = min(len(text), self._tail)
         self._tails[agent_id] = (text[len(text) - keep:], end - keep)
         triggers.sort(key=lambda t: t.span)
         return triggers

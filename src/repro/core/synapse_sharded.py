@@ -39,7 +39,22 @@ def get_shard_axis():
 
 
 def onehot_write(buf, slot, new, mask=None):
-    """buf [B,T,...] <- new [B,...] at per-lane `slot`, via one-hot select."""
+    """buf [B,T,...] <- new [B,...] at per-lane `slot`, via one-hot select.
+
+    Single-device (no shard axis — the engine hot path): a plain per-lane
+    scatter, bitwise-identical to the one-hot select for in-bounds slots
+    (0 <= slot < T, which every caller guarantees — the one-hot form drops
+    out-of-range slots while a scatter would clamp) but without
+    materializing [B,T]-shaped masks for every ring write of every layer
+    of every virtual tick."""
+    if _SHARD_AXIS is None:
+        lane = jnp.arange(buf.shape[0])
+        val = new.astype(buf.dtype)
+        if mask is not None:
+            cur = buf[lane, slot]
+            m = mask.reshape(mask.shape + (1,) * (val.ndim - 1))
+            val = jnp.where(m, val, cur)
+        return buf.at[lane, slot].set(val)
     T = buf.shape[1]
     oh = jax.nn.one_hot(slot, T, dtype=bool)  # [B, T]
     if mask is not None:
@@ -49,7 +64,11 @@ def onehot_write(buf, slot, new, mask=None):
 
 
 def onehot_read(buf, slot):
-    """buf [B,T,...] -> [B,...] at per-lane slot (one-hot contraction)."""
+    """buf [B,T,...] -> [B,...] at per-lane slot (one-hot contraction; plain
+    per-lane gather when no shard axis is live — exact for f32/int32 and
+    in-bounds slots, so the two formulations are interchangeable there)."""
+    if _SHARD_AXIS is None:
+        return buf[jnp.arange(buf.shape[0]), slot]
     T = buf.shape[1]
     oh = jax.nn.one_hot(slot, T, dtype=jnp.float32)
     out = jnp.einsum("bt,bt...->b...", oh, buf.astype(jnp.float32))

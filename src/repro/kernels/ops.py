@@ -13,11 +13,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import landmark_score as _ls
+from repro.kernels import ref as _ref
 from repro.kernels import synapse_attention as _sa
 
 INTERPRET = jax.default_backend() != "tpu"
-# finite mask shared with the kernels: keeps all-invalid rows NaN-free
+# finite mask shared with the kernels AND the per-lane sampler: keeps
+# all-invalid rows NaN-free
 NEG_INF = _sa.NEG_INF
+
+
+def ring_append(ring, vals, cursor):
+    """Append one column to the device token rings: ring [B, R] <- vals [B]
+    at column ``cursor`` ([] int32, traced).
+
+    The rings are the engine's zero-host-sync drain buffers; inside the
+    macro-tick ``lax.scan`` the cursor is the scan carry, so the same
+    program serves every virtual tick of a window.
+    """
+    return jax.lax.dynamic_update_slice(
+        ring, vals.astype(ring.dtype)[:, None], (jnp.zeros_like(cursor), cursor)
+    )
 
 
 def _pad_to(x, axis: int, mult: int, value=0.0):
@@ -44,6 +59,12 @@ def synapse_attention(q, keys, values, valid, *, scale: float | None = None, int
     T = keys.shape[1]
     scale = 1.0 / (D ** 0.5) if scale is None else scale
     if interpret:
+        if T <= 512:
+            # decode-sized problems: the Pallas interpreter's grid/blocking
+            # machinery costs more than the math — the jnp oracle computes
+            # the same masked softmax attend (same NEG_INF mask) faster on
+            # CPU, and this is the engine's per-tick hot path
+            return _ref.synapse_attention_ref(q, keys, values, valid, scale=scale)
         return _sa.synapse_attention(q, keys, values, valid, scale=scale, interpret=True)
     qp = _pad_to(q, 2, 128)
     kp = _pad_to(_pad_to(keys, 3, 128), 1, 128)

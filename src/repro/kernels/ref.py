@@ -8,7 +8,7 @@ import numpy as np
 NEG_INF = -1e30
 
 
-def synapse_attention_ref(q, keys, values, valid):
+def synapse_attention_ref(q, keys, values, valid, scale: float | None = None):
     """q: [B,H,D]; keys/values: [B,T,Hkv,D]; valid: [B,T] bool."""
     B, H, D = q.shape
     Hkv = keys.shape[2]
@@ -16,7 +16,8 @@ def synapse_attention_ref(q, keys, values, valid):
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     k = keys.astype(jnp.float32)
     v = values.astype(jnp.float32)
-    s = jnp.einsum("bkgd,btkd->bkgt", qg, k) / np.sqrt(D)
+    scale = 1.0 / np.sqrt(D) if scale is None else scale
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k) * scale
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", p, v)

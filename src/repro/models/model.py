@@ -174,8 +174,17 @@ def _radd(x, y):
 
 def cast_params(params, cfg: ModelConfig):
     """Cast float params to compute dtype at entry (fp32 masters stay with
-    the optimizer). Keeps matmul FLOPs in bf16 on TPU."""
+    the optimizer). Keeps matmul FLOPs in bf16 on TPU.
+
+    Already-cast trees (the engine pre-casts once and calls decode_step
+    twice per virtual tick of the scanned macro window) short-circuit at
+    trace time — no per-leaf astype graph building inside the scan body."""
     compute = jnp.dtype(cfg.compute_dtype)
+    if all(
+        not jnp.issubdtype(a.dtype, jnp.floating) or a.dtype == compute
+        for a in jax.tree.leaves(params)
+    ):
+        return params
     return jax.tree.map(
         lambda a: a.astype(compute) if jnp.issubdtype(a.dtype, jnp.floating) else a, params
     )

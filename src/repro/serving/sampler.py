@@ -1,10 +1,23 @@
-"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly."""
+"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly.
+
+Two entry points:
+
+* :func:`sample` — one static :class:`SamplingParams` for the whole batch
+  (legacy path; every branch resolves at trace time).
+* :func:`sample_lanes` — per-lane parameters as stacked device arrays
+  (:class:`LaneSampling`), so a greedy main lane and exploratory side lanes
+  share ONE sampling dispatch inside the engine's fused/macro tick. Lanes
+  with ``temperature <= 0`` reduce to exact ``argmax`` — independent of the
+  PRNG key and of every other lane's parameters.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.ops import NEG_INF
 
 
 @dataclass(frozen=True)
@@ -13,6 +26,66 @@ class SamplingParams:
     top_k: int = 0          # 0 = disabled
     top_p: float = 1.0      # 1 = disabled
     greedy: bool = False
+
+
+@dataclass
+class LaneSampling:
+    """Per-lane sampling parameters, stacked over the batch axis.
+
+    Lives inside the engine's donated ``TickState`` so per-lane changes at
+    admission time never recompile the tick. ``temperature <= 0`` marks a
+    greedy lane; ``top_k == 0`` / ``top_p == 1`` disable those filters.
+    """
+
+    temperature: jax.Array  # [B] f32
+    top_k: jax.Array        # [B] int32
+    top_p: jax.Array        # [B] f32
+
+
+jax.tree_util.register_dataclass(
+    LaneSampling, data_fields=["temperature", "top_k", "top_p"], meta_fields=[]
+)
+
+
+def lane_params(params: SamplingParams, n: int) -> LaneSampling:
+    """Broadcast one static SamplingParams to ``n`` lanes."""
+    t = 0.0 if (params.greedy or params.temperature <= 0.0) else params.temperature
+    return LaneSampling(
+        temperature=jnp.full((n,), t, jnp.float32),
+        top_k=jnp.full((n,), params.top_k, jnp.int32),
+        top_p=jnp.full((n,), params.top_p, jnp.float32),
+    )
+
+
+def lane_values(params: SamplingParams) -> tuple[float, int, float]:
+    """(temperature, top_k, top_p) scalars for one lane — the admission-time
+    update path (fed through donated .at[lane].set jits)."""
+    t = 0.0 if (params.greedy or params.temperature <= 0.0) else params.temperature
+    return float(t), int(params.top_k), float(params.top_p)
+
+
+def stack_lane_params(params_list) -> LaneSampling:
+    """Stack a list of SamplingParams (one per lane) into a LaneSampling."""
+    vals = [lane_values(p) for p in params_list]
+    return LaneSampling(
+        temperature=jnp.asarray([v[0] for v in vals], jnp.float32),
+        top_k=jnp.asarray([v[1] for v in vals], jnp.int32),
+        top_p=jnp.asarray([v[2] for v in vals], jnp.float32),
+    )
+
+
+def cat_lanes(*parts: LaneSampling) -> LaneSampling:
+    return jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *parts)
+
+
+def static_flags(params_iterable) -> tuple[bool, bool]:
+    """(use_filters, any_greedy) for :func:`sample_lanes` over the given
+    lanes' SamplingParams — THE definition of the static fast-path contract,
+    shared by every caller so no site can drift to a different predicate."""
+    ps = list(params_iterable)
+    use_filters = any(p.top_k > 0 or p.top_p < 1.0 for p in ps)
+    any_greedy = any(p.greedy or p.temperature <= 0.0 for p in ps)
+    return use_filters, any_greedy
 
 
 def sample(key, logits, params: SamplingParams):
@@ -37,3 +110,53 @@ def sample(key, logits, params: SamplingParams):
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_lanes(key, logits, lanes: LaneSampling, *, use_filters: bool = True,
+                 any_greedy: bool = True):
+    """logits: [B, V] -> tokens [B] int32, per-lane params as device arrays.
+
+    One descending sort serves both filters: rank < top_k and cumulative
+    probability *before* a token < top_p (the top-1 token always survives,
+    so an over-tight top_p can never mask a whole row). The finite NEG_INF
+    mask (shared with the Pallas kernels) keeps filtered rows NaN-free.
+    Greedy lanes (temperature <= 0) select raw argmax via a lane-wise
+    ``where`` — bit-identical to :func:`sample` with ``greedy=True`` and
+    untouched by the stochastic lanes sharing the dispatch.
+
+    ``use_filters``/``any_greedy`` are STATIC fast-path switches the caller
+    derives from host-side knowledge of the lane params (the engine keeps
+    per-lane mirrors): the descending sort is by far the dominant cost of
+    sampling on CPU, and pure temperature/greedy batches don't need it.
+    Callers must only clear a flag when no lane uses that feature — greedy
+    lanes stay exact argmax under either setting of ``use_filters``, but
+    stochastic draws differ bitwise between filtered and unfiltered
+    programs (same distribution, different Gumbel assignment), so a flag
+    may only change when lane params change (admission/drain boundaries).
+    """
+    B, V = logits.shape
+    temps = lanes.temperature.astype(logits.dtype)
+    safe_t = jnp.where(temps > 0.0, temps, 1.0)  # greedy lanes: avoid inf/NaN
+    scaled = logits / safe_t[:, None]
+    if use_filters:
+        order = jnp.argsort(-scaled, axis=-1)                   # descending
+        ranked = jnp.take_along_axis(scaled, order, axis=-1)
+        ranks = jnp.arange(V, dtype=jnp.int32)[None, :]
+        k = jnp.where(lanes.top_k > 0, lanes.top_k, V)[:, None]
+        keep_k = ranks < k
+        # top_p nests inside top_k (same as sample(): the nucleus is taken
+        # from the RENORMALIZED post-top-k distribution)
+        ranked_k = jnp.where(keep_k, ranked, NEG_INF)
+        probs = jax.nn.softmax(ranked_k, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = keep_k & ((cum - probs) < lanes.top_p[:, None])
+        keep = keep.at[:, 0].set(True)
+        masked = jnp.where(keep, ranked, NEG_INF)
+        choice = jax.random.categorical(key, masked, axis=-1)
+        samp = jnp.take_along_axis(order, choice[:, None], axis=-1)[:, 0]
+    else:
+        samp = jax.random.categorical(key, scaled, axis=-1)
+    if any_greedy:
+        greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        samp = jnp.where(temps <= 0.0, greedy_tok, samp)
+    return samp.astype(jnp.int32)

@@ -16,7 +16,7 @@ import numpy as np
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
-from repro.serving.sampler import SamplingParams, sample
+from repro.serving.sampler import SamplingParams, sample_lanes, stack_lane_params, static_flags
 
 
 @dataclass
@@ -24,6 +24,7 @@ class Request:
     rid: int
     prompt: str
     max_new_tokens: int = 64
+    sampling: SamplingParams | None = None  # None -> server default
     tokens: list = field(default_factory=list)
     text: str = ""
     done: bool = False
@@ -54,6 +55,9 @@ class BatchServer:
         self.finished: list[Request] = []
         self._key = jax.random.key(seed)
         self._rid = 0
+        # per-lane sampling arrays + static flags, rebuilt only when lane
+        # composition changes (admission / completion), not per token
+        self._samp_cache = None
 
         self._jit_prefill = jax.jit(
             lambda p, toks, c: model_lib.prefill(p, cfg, {"tokens": toks}, c, spec=self.spec)
@@ -64,9 +68,13 @@ class BatchServer:
             )
         )
 
-    def submit(self, prompt: str, max_new_tokens: int = 64) -> int:
+    def submit(self, prompt: str, max_new_tokens: int = 64,
+               sampling: SamplingParams | None = None) -> int:
+        """``sampling`` overrides the server default for THIS request only —
+        per-lane params ride one shared sampling pass (sample_lanes), so a
+        greedy request batches with exploratory ones."""
         self._rid += 1
-        self.queue.append(Request(self._rid, prompt, max_new_tokens))
+        self.queue.append(Request(self._rid, prompt, max_new_tokens, sampling))
         return self._rid
 
     def _admit(self):
@@ -87,6 +95,7 @@ class BatchServer:
                 req.lane = lane
                 self.positions[lane] = len(ids)
                 self.lanes[lane] = req
+                self._samp_cache = None
 
     def tick(self):
         self._admit()
@@ -98,7 +107,16 @@ class BatchServer:
         pos = jnp.asarray(self.positions, jnp.int32)
         self._key, k = jax.random.split(self._key)
         logits, _, self.caches = self._jit_decode(self.params, toks, pos, self.caches)
-        new = np.asarray(sample(k, logits, self.sampling))
+        if self._samp_cache is None:
+            # empty lanes get the server default — their draws are discarded,
+            # so they must not force the greedy-argmax path on everyone else
+            lane_sp = [(r.sampling or self.sampling) if r else self.sampling
+                       for r in self.lanes]
+            self._samp_cache = (stack_lane_params(lane_sp), *static_flags(lane_sp))
+        lanes_samp, use_filters, any_greedy = self._samp_cache
+        new = np.asarray(sample_lanes(
+            k, logits, lanes_samp, use_filters=use_filters, any_greedy=any_greedy,
+        ))
         for lane, req in enumerate(self.lanes):
             if req is None:
                 continue
@@ -111,6 +129,7 @@ class BatchServer:
                 req.done = True
                 self.finished.append(req)
                 self.lanes[lane] = None
+                self._samp_cache = None
 
     def run_until_done(self, max_ticks: int = 4096):
         for _ in range(max_ticks):

@@ -140,7 +140,8 @@ def test_tick_is_one_dispatch_zero_syncs(setup):
     cfg, params = setup
     eng = _engine(cfg, params, sync_every=4)
     eng.submit("dispatch counting", lane=0)
-    eng.run(4)  # warm every path incl. a drain
+    for _ in range(4):  # warm the SINGLE-tick jit + a drain (run() would
+        eng.tick()      # warm the scanned macro path instead)
     base = dict(eng.stats)
     # transfer_guard makes the "no blocking transfer" invariant real: any
     # implicit device<->host traffic inside tick() raises, independent of

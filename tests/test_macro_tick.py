@@ -1,0 +1,269 @@
+"""Macro-tick engine invariants (ISSUE 4 acceptance criteria).
+
+The contract this suite pins down:
+
+* PARITY — `run(n)` (scanned macro windows) produces bitwise-identical
+  token streams, event history, and memory accounting to the PR 3
+  single-tick path (`tick()` loop) on greedy lanes, across spawn/merge
+  interleavings;
+* DISPATCH COUNT — `run(n)` from a window boundary issues exactly
+  ``ceil(n / sync_every)`` fused-tick dispatches (full windows ride one
+  ``lax.scan`` dispatch, the trailing partial window one shorter scan);
+* ZERO HOST SYNCS — nothing crosses the device boundary inside a macro
+  window (enforced with ``jax.transfer_guard("disallow")``, not just the
+  engine's self-reported counters);
+* DONATION — the scanned dispatch donates the TickState like the single
+  tick does: no cache-aliasing errors, and ``memory_report`` shows no
+  peak-cache growth versus the single-tick engine;
+* PER-LANE SAMPLING — a greedy lane is bitwise unaffected by the other
+  lanes' temperature/top-k/top-p, and ``temperature=0`` reduces exactly
+  to argmax (``greedy=True``).
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import hypothesis_tools
+from repro.configs import get_config
+from repro.core.engine import CortexEngine
+from repro.core.prism import Prism
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import model as model_lib
+from repro.serving.sampler import SamplingParams, sample_lanes, stack_lane_params
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_config("qwen2.5-0.5b", reduced=True), compute_dtype="float32"
+    )
+
+
+def _engine(cfg, params, *, sync_every=4, max_side=2, theta=2.0, side_max_steps=6,
+            sampling=SamplingParams(greedy=True), side_sampling=None):
+    prism = Prism(params, cfg)
+    tok = ByteTokenizer(cfg.vocab_size)
+    return CortexEngine(
+        prism, tok, n_main=1, max_side=max_side, main_capacity=128,
+        side_max_steps=side_max_steps, inject_tokens=8, theta=theta,
+        sampling=sampling, side_sampling=side_sampling, sync_every=sync_every,
+    )
+
+
+def _run_single_tick(eng, n):
+    """The PR 3 reference path: one dispatch per virtual tick."""
+    for _ in range(n):
+        eng.tick()
+    eng.drain()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def pair(setup):
+    """The same spawn/merge workload on the macro path and the single-tick
+    path (theta=-1 accepts merges, so side thoughts mutate the main cache
+    mid-run — parity must survive the full control plane)."""
+    cfg, params = setup
+    kw = dict(sync_every=4, max_side=2, theta=-1.0, side_max_steps=6)
+    macro = _engine(cfg, params, **kw)
+    single = _engine(cfg, params, **kw)
+    prompt = "hello [TASK: go] world"
+    macro.submit(prompt, lane=0)
+    single.submit(prompt, lane=0)
+    base = dict(macro.stats)
+    macro.run(24)
+    _run_single_tick(single, 24)
+    return macro, single, base
+
+
+def test_macro_matches_single_tick_bitwise(pair):
+    macro, single, _ = pair
+    assert macro.mains[0].tokens == single.mains[0].tokens
+    for sm, ss in zip(macro.sides, single.sides):
+        assert sm.tokens == ss.tokens
+    # the control plane interleaved identically: same events, same verdicts
+    assert [(e["event"], e.get("accepted")) for e in macro.history] == \
+           [(e["event"], e.get("accepted")) for e in single.history]
+    assert any(e["event"] == "merge" for e in macro.history)
+
+
+def test_macro_dispatch_count_is_amortized(pair):
+    macro, single, base = pair
+    # 24 ticks @ sync_every=4: six scanned dispatches vs twenty-four
+    assert macro.stats["tick_dispatches"] - base["tick_dispatches"] == 24 // 4
+    assert macro.stats["macro_dispatches"] - base["macro_dispatches"] == 24 // 4
+    assert macro.stats["ticks"] - base["ticks"] == 24
+    # same drain cadence as the single-tick engine
+    assert macro.stats["drains"] - base["drains"] == 24 // 4
+
+
+def test_macro_donation_no_peak_memory_growth(pair):
+    """Donated scan: the macro engine holds exactly the same resident cache
+    bytes as the single-tick engine — a failed donation would have doubled
+    the cache footprint (or raised a buffer-aliasing error mid-run)."""
+    macro, single, _ = pair
+    rep_m = macro.memory_report()
+    rep_s = single.memory_report()
+    assert rep_m["total_bytes"] == rep_s["total_bytes"]
+    assert rep_m["n_agents"] == rep_s["n_agents"]
+    # more macro windows leave the footprint bit-stable
+    macro.run(8)
+    assert macro.memory_report()["total_bytes"] == rep_m["total_bytes"]
+
+
+def test_dispatch_count_is_ceil_for_partial_windows(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, sync_every=4, max_side=1)
+    eng.submit("ceil probe", lane=0)
+    for n in (8, 7, 3, 1):
+        base = eng.stats["tick_dispatches"]
+        eng.run(n)  # always starts/ends on a drain boundary
+        assert eng.stats["tick_dispatches"] - base == math.ceil(n / 4), n
+
+
+def test_zero_host_syncs_inside_macro_window(setup):
+    """The whole sync_every window runs with device<->host transfers hard
+    disallowed; only the drain (outside the guard) touches the host."""
+    cfg, params = setup
+    eng = _engine(cfg, params, sync_every=4, max_side=1)
+    m = eng.submit("transfer guard probe", lane=0)
+    eng.run(8)  # warm the scanned dispatch + drain
+    base = dict(eng.stats)
+    n_tok = len(m.tokens)
+    with jax.transfer_guard("disallow"):
+        eng._dispatch_window(eng.sync_every)
+    assert eng.stats["tick_dispatches"] - base["tick_dispatches"] == 1
+    assert eng.stats["macro_dispatches"] - base["macro_dispatches"] == 1
+    assert eng.stats["host_syncs"] == base["host_syncs"]
+    assert eng.stats["drains"] == base["drains"]
+    eng.drain()  # ONE pull of the rings closes the window
+    assert eng.stats["host_syncs"] == base["host_syncs"] + 1
+    assert len(m.tokens) == n_tok + eng.sync_every
+
+
+def test_greedy_lane_unaffected_by_other_lanes_params(setup):
+    """Per-lane sampling determinism: the greedy river's stream is bitwise
+    invariant under the side lanes' exploration params (same PRNG seed)."""
+    cfg, params = setup
+    streams = []
+    for side_sampling in (
+        SamplingParams(temperature=0.9, top_k=8),
+        SamplingParams(temperature=1.4, top_p=0.8),
+    ):
+        eng = _engine(cfg, params, sync_every=4, max_side=1,
+                      side_sampling=side_sampling, side_max_steps=64)
+        m = eng.submit("probe [TASK: explore] x", lane=0)
+        eng.run(12)
+        assert any(s.active for s in eng.sides)  # the stochastic lane ran
+        streams.append(list(m.tokens))
+    assert streams[0] == streams[1]
+
+
+def test_temperature_zero_reduces_to_argmax(pair, setup):
+    """An engine submitted with temperature=0 equals the greedy=True engine
+    token-for-token on the same workload."""
+    cfg, params = setup
+    _, single, _ = pair
+    eng = _engine(cfg, params, sync_every=4, max_side=2, theta=-1.0, side_max_steps=6,
+                  sampling=SamplingParams(temperature=0.0))
+    eng.submit("hello [TASK: go] world", lane=0)
+    eng.run(24)
+    assert eng.mains[0].tokens == single.mains[0].tokens
+
+
+def test_sample_lanes_units():
+    """Direct sampler contract: greedy/top-k=1 lanes are argmax; lane
+    params are independent (changing lane 1 cannot move lane 0)."""
+    logits = jax.random.normal(jax.random.key(1), (3, 97))
+    am = jnp.argmax(logits, axis=-1)
+    key = jax.random.key(2)
+    t = sample_lanes(key, logits, stack_lane_params([
+        SamplingParams(temperature=0.0),
+        SamplingParams(temperature=1.0, top_k=1),
+        SamplingParams(temperature=1.2, top_p=0.85),
+    ]))
+    assert int(t[0]) == int(am[0])       # temperature=0 -> argmax
+    assert int(t[1]) == int(am[1])       # top_k=1 -> argmax at any temp
+    # greedy=True flag and temperature=0 are the same lane encoding
+    t2 = sample_lanes(key, logits, stack_lane_params([
+        SamplingParams(greedy=True),
+        SamplingParams(temperature=0.7),
+        SamplingParams(temperature=0.3, top_k=5),
+    ]))
+    assert int(t2[0]) == int(am[0])
+    # top_p so tight only the top token survives -> argmax
+    t3 = sample_lanes(key, logits, stack_lane_params([
+        SamplingParams(temperature=1.0, top_p=1e-6),
+        SamplingParams(temperature=1.0, top_p=1e-6),
+        SamplingParams(temperature=1.0, top_p=1e-6),
+    ]))
+    np.testing.assert_array_equal(np.asarray(t3), np.asarray(am))
+
+
+def test_top_p_nests_inside_top_k():
+    """Combined filters match sample(): the nucleus is taken from the
+    RENORMALIZED post-top-k distribution. probs [0.4, 0.3, 0.3] with
+    top_k=2 renormalizes to [0.571, 0.429]; top_p=0.5 then keeps only the
+    top token — so every draw must be argmax."""
+    logits = jnp.log(jnp.asarray([[0.4, 0.3, 0.3]] * 2))
+    lanes = stack_lane_params([SamplingParams(temperature=1.0, top_k=2, top_p=0.5)] * 2)
+    for seed in range(8):
+        t = sample_lanes(jax.random.key(seed), logits, lanes)
+        np.testing.assert_array_equal(np.asarray(t), np.zeros(2, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# property-based parity (hypothesis optional — gated via conftest)
+# ---------------------------------------------------------------------------
+given, settings, st = hypothesis_tools()
+
+_PROP = {}  # (sync_every, kind) -> engine, reused across examples
+
+
+def _prop_engine(setup, sync_every, kind):
+    cfg, params = setup
+    key = (sync_every, kind)
+    if key not in _PROP:
+        _PROP[key] = _engine(cfg, params, sync_every=sync_every, max_side=2,
+                             theta=-1.0, side_max_steps=4)
+    eng = _PROP[key]
+    for s in eng.sides:  # clear streams left over from the previous example
+        if s.active:
+            eng.retire_side(s.lane)
+    return eng
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    prompt=st.text(alphabet="abcdef ", min_size=1, max_size=12),
+    with_task=st.booleans(),
+    sync_every=st.sampled_from([1, 2, 4, 8]),
+    n_windows=st.integers(min_value=1, max_value=2),
+    extra=st.integers(min_value=0, max_value=1),
+)
+def test_property_macro_equals_single_tick(setup, prompt, with_task, sync_every, n_windows, extra):
+    """Random prompts, window sizes, and spawn/merge interleavings: the
+    macro-tick engine equals the single-tick engine token-for-token on
+    greedy lanes (main AND side), including partial trailing windows."""
+    text = prompt + (" [TASK: check] tail" if with_task else "")
+    n = n_windows * sync_every + extra
+    macro = _prop_engine(setup, sync_every, "macro")
+    single = _prop_engine(setup, sync_every, "single")
+    mm = macro.submit(text, lane=0)
+    ms = single.submit(text, lane=0)
+    base = macro.stats["tick_dispatches"]
+    macro.run(n)
+    _run_single_tick(single, n)
+    assert mm.tokens == ms.tokens
+    for sm, ss in zip(macro.sides, single.sides):
+        assert sm.tokens == ss.tokens
+    assert macro.stats["tick_dispatches"] - base == math.ceil(n / sync_every)
