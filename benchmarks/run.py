@@ -21,7 +21,8 @@ def smoke() -> dict:
     same function, so the CI script step and the pytest check cannot drift."""
     from benchmarks import bench_throughput
 
-    out = bench_throughput.run(side_counts=(2,), ticks=4, warmup=4, sync_every=2)
+    out = bench_throughput.run(side_counts=(2,), ticks=4, warmup=4, sync_every=2,
+                               ab_reps=3, adaptive_ticks=48)
     res = out["per_side"][2]
     assert res["tick_s"] > 0
     assert res["active"] == 2
@@ -33,6 +34,15 @@ def smoke() -> dict:
     assert res["macro_dispatches"] >= 1
     # drains every sync_every ticks -> at most 1/sync_every syncs per tick
     assert res["host_syncs_per_tick"] <= 1.0 / out["sync_every"] + 1e-9
+    # pipelined drains: the A/B arm must actually overlap host work with
+    # device windows (multi-window chunks), bitwise-parity asserted inside
+    assert out["ab"]["overlap_fraction"] > 0, out["ab"]
+    # adaptive windows: a trigger-free run lengthens past the base window
+    # and drops the amortized dispatch rate below 1/sync_every
+    ada = out["adaptive"]
+    assert ada["longest_window"] > out["sync_every"], ada
+    assert ada["dispatches_per_tick"] < 1.0 / out["sync_every"], ada
+    assert ada["overlap_fraction"] > 0, ada
     os.makedirs("benchmarks/artifacts", exist_ok=True)
     with open("benchmarks/artifacts/bench_smoke.json", "w") as f:
         json.dump(out, f, indent=1, default=str)

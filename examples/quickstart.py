@@ -45,10 +45,15 @@ def main():
             f"request {i}: tell me something.", max_new_tokens=args.max_new_tokens,
             sampling=per_request[i % len(per_request)],
         )
+    # pipelined drain (default): step t+1 is dispatched before step t's
+    # tokens reach the host, so detokenize/EOS checks overlap device decode
     done = server.run_until_done()
     for r in done:
         mode = r.sampling or server.sampling
         print(f"[req {r.rid}] ({mode}) {r.prompt!r} -> {r.text!r}")
+    st = server.stats
+    print(f"[server] steps={st['steps']} overlapped={st['overlapped']} "
+          f"rollbacks={st['rollbacks']}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,27 @@ scheduler hot loop*:
   the per-tick body over the window inside a single jitted, donated program,
   emitting the token rings for the full window. :meth:`CortexEngine.run(n)`
   therefore issues ``ceil(n / sync_every)`` dispatches instead of ``n``.
+* PIPELINED DRAINS (two-deep pipeline): ``run(n)`` fetches window *t*'s
+  rings (the ONE blocking transfer per window), then — when a cheap
+  conservative gate on the raw ring bytes proves window *t* cannot carry a
+  router trigger or side completion — dispatches window *t+1* BEFORE doing
+  window *t*'s host post-processing, so UTF-8 decoding, router regex scans,
+  and bookkeeping overlap the device's execution of the next window. The
+  gate never misses a control event (triggers need a ``[``/``]`` byte pair,
+  side step budgets are host-computable), so spawn/merge timing — and hence
+  every token — is bitwise identical to the serial dispatch→drain→dispatch
+  order. A failed gate simply falls back to that serial order for one
+  window; user-facing control calls (``submit``/``retire_side``/``drain``)
+  flush the in-flight window before mutating state.
+* ADAPTIVE WINDOWS: :class:`AdaptiveWindow` lengthens the scan window
+  (``sync_every`` × {1, 2, 4, …} up to ``max_window`` — a small fixed set of
+  lazily jit-cached scan lengths) while drains stay quiet, and snaps back to
+  the base window on any trigger, spawn, merge, or admission. Windows are
+  capped exactly at the serial-path boundary where an active side's step
+  budget completes, and the router's :meth:`~repro.core.router.CortexRouter.
+  plausible` hint (an unclosed ``[`` near the stream end) forces a short
+  window — so control ops land on the same virtual tick as the pinned-window
+  engine.
 * Per-lane sampling: temperature/top-k/top-p live as stacked device arrays
   (:class:`repro.serving.sampler.LaneSampling`) inside ``TickState``, so a
   greedy river can coexist with exploratory streams in the same dispatch and
@@ -32,14 +53,18 @@ scheduler hot loop*:
   Validation Gate (§3.5) + Referential Injection (§3.6) fused into one
   dispatch (``injection.merge_thought``).
 
-Performance invariants (asserted by tests/test_fused_tick.py and
-tests/test_macro_tick.py):
+Performance invariants (asserted by tests/test_fused_tick.py,
+tests/test_macro_tick.py, and tests/test_adaptive_pipeline.py):
   * ``tick()`` issues exactly ONE jitted dispatch;
-  * ``run(n)`` issues exactly ``ceil(n / sync_every)`` jitted dispatches;
-  * no blocking host transfer happens outside ``drain()``;
-  * ``drain()`` performs exactly one device→host pull of the token rings;
-  * greedy lanes are bitwise identical between the scanned macro path and
-    the single-tick path, and unaffected by other lanes' sampling params.
+  * ``run(n)`` issues exactly ``ceil(n / sync_every)`` jitted dispatches
+    with a pinned window, and **at most** that many with adaptation on;
+  * no blocking host transfer happens outside ``drain()``/``_fetch_rings``;
+  * each drain performs exactly one device→host pull of the token rings,
+    and the overlapped post-processing region issues ZERO transfers (it
+    runs under ``jax.transfer_guard("disallow")`` in the tests);
+  * greedy lanes are bitwise identical between the pipelined/adaptive path,
+    the serial macro path, and the single-tick path, across spawn/merge
+    interleavings, and unaffected by other lanes' sampling params.
 """
 from __future__ import annotations
 
@@ -322,6 +347,51 @@ def _spawn_lane(cfg: ModelConfig, side_spec, main_caches, side_caches, parent_la
     )
 
 
+# byte values the conservative drain gate inspects on the raw token rings
+# (ByteTokenizer: ids 0..255 are raw bytes; every router tag needs them both)
+_OPEN_BRACKET, _CLOSE_BRACKET = ord("["), ord("]")
+
+
+class AdaptiveWindow:
+    """Window-length policy: lengthen ``sync_every`` while drains are quiet.
+
+    Proposals come from a small fixed ladder ``base * {1, 2, 4, ...}`` capped
+    at ``max_window``, so the engine's lazily jit-cached scan-length variants
+    stay bounded (one compile per rung, ever). The policy climbs one rung per
+    quiet drain — no router trigger, no spawn/merge/completion, no admission
+    — and snaps back to the base window on any such event, restoring the
+    trigger-reaction latency of the pinned engine the moment control traffic
+    reappears. ``max_window == base`` degenerates to the pinned policy.
+    """
+
+    def __init__(self, base: int, max_window: int | None = None):
+        self.base = max(1, base)
+        requested = max(self.base, max_window or self.base)
+        # every rung must be base * 2^k: the engine's boundary math (side
+        # budget caps, drain alignment with the pinned reference) assumes
+        # windows are base multiples, so a max_window that is not on the
+        # ladder rounds DOWN to the largest rung below it
+        ladder = [self.base]
+        while ladder[-1] * 2 <= requested:
+            ladder.append(ladder[-1] * 2)
+        self.ladder = tuple(ladder)
+        self.max_window = ladder[-1]
+        self._rung = 0
+
+    @property
+    def adaptive(self) -> bool:
+        return len(self.ladder) > 1
+
+    def propose(self) -> int:
+        return self.ladder[self._rung]
+
+    def on_quiet_drain(self):
+        self._rung = min(self._rung + 1, len(self.ladder) - 1)
+
+    def on_event(self):
+        self._rung = 0
+
+
 @dataclass
 class AgentView:
     """Host-side bookkeeping for one agent lane (refreshed at drain time)."""
@@ -356,6 +426,8 @@ class CortexEngine:
         side_sampling: SamplingParams | None = None,
         seed: int = 0,
         sync_every: int = 1,
+        max_window: int | None = None,
+        pipeline: bool = True,
         side_prompt_cap: int = 64,
         compute_dtype: str | None = None,
     ):
@@ -377,9 +449,27 @@ class CortexEngine:
         self.side_sampling = side_sampling if side_sampling is not None else sampling
         self.sync_every = max(1, sync_every)
         self.side_prompt_cap = side_prompt_cap
+        # Adaptive windows: ``run`` may scan up to max_window virtual ticks
+        # per dispatch while drains stay quiet (max_window=None pins the
+        # window at sync_every; off-ladder values round DOWN to base*2^k).
+        # ``pipeline=False`` keeps the serial PR 4 dispatch→drain→dispatch
+        # order — the parity reference in tests — whose windows stay pinned,
+        # so adaptation is dropped there rather than paying max_window-sized
+        # rings and router tail for a policy that never engages.
+        self.window = AdaptiveWindow(
+            self.sync_every, max_window if pipeline else None
+        )
+        self.max_window = self.window.max_window
+        self.pipeline = pipeline
         # macro windows mean bigger drain chunks: size the router's overlap
-        # tail so a tag split across window boundaries still matches
-        self.router = CortexRouter(tail=max(256, 8 * self.sync_every))
+        # tail so a tag split across window boundaries still matches. The
+        # tail must cover (a) the longest tag the engine round-trips — a
+        # side_prompt_cap-byte task payload plus '[TASK: ]' framing — and
+        # (b) a full drain window of text (8 bytes/token bounds the worst
+        # UTF-8 replacement expansion). tests/test_router.py pins this.
+        self.router = CortexRouter(
+            tail=max(256, 8 * self.max_window, side_prompt_cap + 16)
+        )
 
         self.main_spec = model_lib.CacheSpec(kind="full", capacity=main_capacity)
         self.side_spec = side_spec or model_lib.CacheSpec(
@@ -397,6 +487,10 @@ class CortexEngine:
         self.stats = {
             "ticks": 0, "tick_dispatches": 0, "macro_dispatches": 0,
             "aux_dispatches": 0, "host_syncs": 0, "drains": 0,
+            # pipeline/adaptive telemetry: drains whose host post-processing
+            # overlapped the next window's device execution, and a histogram
+            # of dispatched window lengths (window_hist[w] = count)
+            "overlapped_drains": 0, "window_hist": {},
         }
         self._pending = 0  # ticks since last drain (== device ring cursor)
 
@@ -406,7 +500,8 @@ class CortexEngine:
         # copy stays authoritative for accounting/training.
         self._params = model_lib.cast_params(prism.params, cfg)
         d = cfg.d_model
-        M, S, R, P = n_main, max_side, self.sync_every, side_prompt_cap
+        # rings must hold the longest adaptive window, not just sync_every
+        M, S, R, P = n_main, max_side, self.max_window, side_prompt_cap
         self.state = TickState(
             key=jax.random.key(seed, impl="rbg"),  # cheap per-tick key chain on CPU
             cursor=jnp.zeros((), jnp.int32),
@@ -517,6 +612,7 @@ class CortexEngine:
         ``sampling`` overrides the engine default for THIS lane only (e.g. a
         greedy river among exploratory lanes); restarting a lane resets it."""
         self.drain()  # align host mirrors to a window boundary
+        self.window.on_event()  # admission: back to the base window
         ids = self.tok.encode(prompt, bos=True)
         toks = jnp.asarray([ids], jnp.int32)
         logits, hidden, new_caches = self._jit_prefill_lane(
@@ -575,9 +671,9 @@ class CortexEngine:
         self.drain()
 
     def _dispatch_window(self, n: int):
-        """Advance ``n <= sync_every - pending`` virtual ticks in one
+        """Advance ``n <= max_window - pending`` virtual ticks in one
         dispatch. No drain, no host sync — callers close the window."""
-        assert self._pending + n <= self.sync_every
+        assert self._pending + n <= self.max_window
         step_sides = any(s.active for s in self.sides)
         fn = self._macro_fn(n, step_sides, *self._sampler_flags(step_sides))
         self.state = fn(self._params, self.state)
@@ -585,12 +681,150 @@ class CortexEngine:
         self.stats["tick_dispatches"] += 1
         if n > 1:
             self.stats["macro_dispatches"] += 1
+        hist = self.stats["window_hist"]
+        hist[n] = hist.get(n, 0) + 1
         self._pending += n
 
+    def _next_window(self, remaining: int, pending=None) -> int:
+        """Length of the next scan window: the adaptive proposal, capped (a)
+        exactly at the serial-path boundary where any active side's step
+        budget completes — a multiple of the base window, so the merge lands
+        on the same virtual tick as the pinned engine — and (b) to the base
+        window whenever the router's retained tail holds an unclosed ``[``
+        (a tag may be completing: keep reaction latency at one base window).
+        Every cap keeps the window a multiple of the base except the run's
+        trailing partial window (``remaining``).
+
+        ``pending=(rings, n)`` is the overlapped-branch correction: window
+        *t* has been fetched but NOT yet post-processed, so the side views'
+        ``tokens``/``steps`` are one window stale — the budget cap must
+        count window *t*'s recorded ring tokens or the boundary lands one
+        window late and the merge drifts off the serial tick (the router
+        tail, by contrast, is provably unchanged by a gate-approved window:
+        no ``[`` entered it and no pending ``[`` was closed)."""
+        base = self.sync_every
+        w = self.window.propose()
+        if w > base:
+            for s in self.sides:
+                if not s.active:
+                    continue
+                generated = len(s.tokens) - s.prompt_len
+                steps = s.steps
+                if pending is not None:
+                    rings, p_n = pending
+                    toks = rings[1][s.lane, :p_n]
+                    generated += int((toks >= 0).sum())
+                    steps += p_n
+                forced_left = max(0, (s.prompt_len - 1) - steps)
+                t_budget = forced_left + max(1, self.side_max_steps - generated)
+                boundary = base * -(-t_budget // base)  # ceil to base multiple
+                w = min(w, boundary)
+            if any(
+                self.router.plausible(a.agent_id)
+                for a in (*self.mains, *self.sides) if a.active
+            ):
+                w = base
+        return min(w, remaining)
+
+    def _gate(self, rings, n: int) -> bool:
+        """May window ``t+1`` be dispatched BEFORE window ``t``'s host
+        post-processing? True only when that post-processing provably issues
+        no control op (spawn/merge/completion) — i.e. it is pure host
+        bookkeeping. Conservative, byte-level, and cheap (numpy on the
+        already-fetched rings):
+
+        * any ``[`` in a lane's new tokens could open (and close) a tag —
+          unsafe;
+        * a ``]`` completes a tag only if the retained router tail has an
+          unclosed ``[`` (:meth:`CortexRouter.plausible`) — unsafe;
+        * a side lane reaching its step budget this window merges — exact
+          host arithmetic, unsafe.
+
+        False negatives are impossible (every trigger needs those bytes;
+        budgets are deterministic), so a True verdict guarantees bitwise
+        parity with the serial drain order."""
+        main_ring, side_ring = rings
+        for m in self.mains:
+            if not m.active:
+                continue
+            toks = main_ring[m.lane, :n]
+            toks = toks[toks >= 0]
+            if (toks == _OPEN_BRACKET).any():
+                return False
+            if (toks == _CLOSE_BRACKET).any() and self.router.plausible(m.agent_id):
+                return False
+        for s in self.sides:
+            if not s.active:
+                continue
+            toks = side_ring[s.lane, :n]
+            toks = toks[toks >= 0]
+            if (toks == _OPEN_BRACKET).any():
+                return False
+            if (toks == _CLOSE_BRACKET).any() and self.router.plausible(s.agent_id):
+                return False
+            if len(s.tokens) - s.prompt_len + toks.size >= self.side_max_steps:
+                return False
+        return True
+
     def run(self, n_ticks: int):
-        """Advance ``n_ticks`` virtual ticks in ``ceil(n_ticks/sync_every)``
-        dispatches (from a window boundary): full windows ride the scanned
-        macro tick, the trailing partial window is one shorter scan."""
+        """Advance ``n_ticks`` virtual ticks in at most
+        ``ceil(n_ticks/sync_every)`` dispatches (exactly that many with a
+        pinned window; adaptive windows need fewer).
+
+        Pipelined (default): after fetching window *t*'s rings — the one
+        blocking sync per window — the conservative :meth:`_gate` decides
+        whether window *t+1* is dispatched before window *t*'s host
+        post-processing, overlapping router/decode work with device compute.
+        ``pipeline=False`` keeps the serial PR 4 loop (the parity reference).
+        """
+        if not self.pipeline:
+            return self._run_serial(n_ticks)
+        remaining = n_ticks
+        # close a partially-filled window (tick() interleavings) exactly
+        # like the serial path before entering the pipeline at a boundary
+        while 0 < remaining and self._pending:
+            if not self._any_active():
+                self.stats["ticks"] += remaining
+                self.drain()
+                return
+            w = min(self.sync_every - self._pending, remaining)
+            self._dispatch_window(w)
+            remaining -= w
+            if self._pending >= self.sync_every:
+                self.drain()
+        if self._pending:
+            self.drain()
+
+        inflight = 0  # virtual ticks of the window currently on the device
+        while remaining or inflight:
+            if not inflight:
+                if not self._any_active():
+                    self.stats["ticks"] += remaining
+                    return
+                inflight = self._next_window(remaining)
+                self._dispatch_window(inflight)
+                self._prefetch_rings()
+                remaining -= inflight
+                continue
+            rings, nwin = self._fetch_rings(), inflight
+            inflight = 0
+            if remaining and self._any_active() and self._gate(rings, nwin):
+                # overlap: the device starts window t+1 while the host does
+                # window t's decoding/router work (guaranteed control-free);
+                # the window policy must see window t's still-unprocessed
+                # ring tokens or its budget caps run one window stale
+                inflight = self._next_window(remaining, pending=(rings, nwin))
+                self._dispatch_window(inflight)
+                self._prefetch_rings()
+                remaining -= inflight
+                self._postprocess(rings, nwin, overlapped=True)
+                self.stats["overlapped_drains"] += 1
+            else:
+                self._postprocess(rings, nwin)
+
+    def _run_serial(self, n_ticks: int):
+        """The PR 4 lockstep loop: dispatch → drain → dispatch, pinned
+        ``sync_every`` windows. Kept as the bitwise parity reference."""
         remaining = n_ticks
         while remaining > 0:
             if not self._any_active():
@@ -614,11 +848,37 @@ class CortexEngine:
         n = self._pending
         if n == 0:
             return
-        main_ring, side_ring = jax.device_get((self.state.main_ring, self.state.side_ring))
+        self._postprocess(self._fetch_rings(), n)
+
+    def _prefetch_rings(self):
+        """Start the device→host ring copies as soon as the in-flight
+        window's compute finishes, so the ``_fetch_rings`` that follows the
+        overlapped host work blocks only on the residue. Only worth issuing
+        where a fetch is known to follow — the pipelined ``run`` loop; the
+        single-tick path overwrites the rings before any fetch."""
+        self.state.main_ring.copy_to_host_async()
+        self.state.side_ring.copy_to_host_async()
+
+    def _fetch_rings(self):
+        """The pipeline's sync point: ONE blocking device→host pull of the
+        token rings (host numpy copies), then reset the ring cursor so the
+        next dispatch — which donates the ring buffers — starts a fresh
+        window immediately."""
+        rings = jax.device_get((self.state.main_ring, self.state.side_ring))
         self.stats["host_syncs"] += 1
-        self.stats["drains"] += 1
         self._pending = 0
         self.state = dataclasses.replace(self.state, cursor=jnp.zeros((), jnp.int32))
+        return rings
+
+    def _postprocess(self, rings, n: int, *, overlapped: bool = False):
+        """Window ``t``'s host-side control plane over the fetched rings:
+        decode text, feed the router, complete/merge sides, spawn rivers'
+        tasks. With ``overlapped=True`` the next window is already on the
+        device, so any control op here would be a gate violation — asserted,
+        and by the gate's conservativeness unreachable."""
+        main_ring, side_ring = rings
+        self.stats["drains"] += 1
+        quiet = True
 
         # 1. rivers: append the window's tokens
         main_chunks: dict[int, str] = {}
@@ -646,7 +906,9 @@ class CortexEngine:
             s.tokens.extend(raw)
             chunk = self.tok.decode(raw)
             s.text += chunk
-            trig = [t for t in self.router.feed(s.agent_id, chunk) if t.kind in ("done", "answer")]
+            all_trig = self.router.feed(s.agent_id, chunk)
+            quiet = quiet and not all_trig
+            trig = [t for t in all_trig if t.kind in ("done", "answer")]
             generated = len(s.tokens) - s.prompt_len
             if trig or generated >= self.side_max_steps:
                 answer = next((t.payload for t in trig if t.kind == "answer"), None)
@@ -662,16 +924,27 @@ class CortexEngine:
                 finished.append((s, thought))
 
         # 3. merges (free lanes before new spawns claim them)
+        assert not (overlapped and finished), "pipeline gate violated: merge"
         for s, thought in finished:
             self._merge_side(s, thought)
+        quiet = quiet and not finished
 
         # 4. river triggers spawn new streams
         for m in self.mains:
             if not m.active or m.lane not in main_chunks:
                 continue
             for tr in self.router.feed(m.agent_id, main_chunks[m.lane]):
+                quiet = False
+                assert not overlapped, "pipeline gate violated: trigger"
                 if tr.kind == "task":
                     self._spawn_side(m, tr.payload)
+
+        # 5. window policy: quiet drains earn longer windows, any control
+        # event snaps back to the base window
+        if quiet:
+            self.window.on_quiet_drain()
+        else:
+            self.window.on_event()
 
     # ------------------------------------------------------------------
     def _free_side_lane(self) -> int:
@@ -732,6 +1005,7 @@ class CortexEngine:
         if not s.active:
             return
         self.drain()
+        self.window.on_event()  # composition change: back to the base window
         act_a = self._jit_retire_side(self.state.side_active, lane)
         self.state = dataclasses.replace(self.state, side_active=act_a)
         self.stats["aux_dispatches"] += 1

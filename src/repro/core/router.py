@@ -32,8 +32,19 @@ class CortexRouter:
 
     ``tail`` is the overlap kept between feeds so tags split across drain
     boundaries still match. The engine scales it with its macro-tick window
-    (one drain per ``sync_every`` virtual ticks feeds the whole window's
-    decoded text in a single chunk).
+    (one drain per window feeds the whole window's decoded text in a single
+    chunk). **Tail-size contract**: a tag longer than ``tail`` characters can
+    straddle a drain boundary with its opening ``[`` already evicted from the
+    retained overlap, and is then silently missed — so the engine must size
+    ``tail`` at least as large as the longest tag it can round-trip
+    (``[TASK: <side_prompt_cap bytes>]`` plus framing) and at least one full
+    drain window of text (``8 * max_window`` bytes covers the worst-case
+    UTF-8 expansion). tests/test_router.py pins both sides of this contract.
+
+    :meth:`plausible` is the pipelined engine's trigger-plausibility hint: an
+    unclosed ``[`` in the retained tail means the next drained chunk could
+    complete a tag, so the adaptive-window policy must keep the window short
+    and the pipelined drain must process that lane serially.
     """
 
     def __init__(self, tail: int = 256):
@@ -68,6 +79,15 @@ class CortexRouter:
         """Full-text convenience wrapper: feeds only the unseen suffix."""
         seen = self._scanned.get(agent_id, 0)
         return self.feed(agent_id, text[min(seen, len(text)):])
+
+    def plausible(self, agent_id: str) -> bool:
+        """True when the retained tail ends with an unclosed ``[`` — i.e. a
+        trigger tag may be in flight across the drain boundary. Conservative
+        by construction: every tag this router matches needs a ``[`` before
+        its closing ``]``, so ``plausible() == False`` plus a bracket-free
+        next chunk guarantees :meth:`feed` on that chunk returns nothing."""
+        tail, _ = self._tails.get(agent_id, ("", 0))
+        return "[" in tail[tail.rfind("]") + 1:]
 
     def reset(self, agent_id: str):
         self._scanned.pop(agent_id, None)

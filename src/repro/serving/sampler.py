@@ -78,6 +78,36 @@ def cat_lanes(*parts: LaneSampling) -> LaneSampling:
     return jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *parts)
 
 
+class SampCache:
+    """Memoized (stacked LaneSampling, use_filters, any_greedy) for a lane
+    composition, with an explicit invalidation hook.
+
+    Serving loops rebuild the stacked per-lane arrays only when the lane
+    composition changes — admission, completion, and mid-window retirement
+    must ALL call :meth:`invalidate`, because a stale cache silently reuses
+    the previous request's sampling params on a recycled lane (and, through
+    the static fast-path flags, can pin the whole batch to the wrong
+    program). Central hook so no call site re-implements the pair."""
+
+    def __init__(self):
+        self._val = None
+
+    @property
+    def valid(self) -> bool:
+        return self._val is not None
+
+    def invalidate(self):
+        self._val = None
+
+    def get(self, lane_params):
+        """``lane_params``: zero-arg callable returning the per-lane
+        SamplingParams list; only consulted on a cache miss."""
+        if self._val is None:
+            ps = list(lane_params())
+            self._val = (stack_lane_params(ps), *static_flags(ps))
+        return self._val
+
+
 def static_flags(params_iterable) -> tuple[bool, bool]:
     """(use_filters, any_greedy) for :func:`sample_lanes` over the given
     lanes' SamplingParams — THE definition of the static fast-path contract,
@@ -136,7 +166,11 @@ def sample_lanes(key, logits, lanes: LaneSampling, *, use_filters: bool = True,
     """
     B, V = logits.shape
     temps = lanes.temperature.astype(logits.dtype)
-    safe_t = jnp.where(temps > 0.0, temps, 1.0)  # greedy lanes: avoid inf/NaN
+    # clamp tiny positive temperatures exactly like sample() does: without
+    # it a denormal temperature overflows the scaled logits to inf and the
+    # categorical draws among inf ties — temperature -> 0+ must converge to
+    # argmax, not to tie-breaking noise (tests/test_sampler_edges.py)
+    safe_t = jnp.where(temps > 0.0, jnp.maximum(temps, 1e-6), 1.0)
     scaled = logits / safe_t[:, None]
     if use_filters:
         order = jnp.argsort(-scaled, axis=-1)                   # descending

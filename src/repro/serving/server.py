@@ -4,6 +4,22 @@ The plain-serving baseline the paper compares against: N requests = N full
 KV caches. Lanes are recycled as requests finish; prefill is per-admission,
 decode is one fused batched step per tick. The CortexEngine (core/engine.py)
 is the Warp-Cortex counterpart with shared weights + synapse sides.
+
+Pipelined drain (default in :meth:`run_until_done`): sampled tokens stay on
+the device and feed the next decode step directly, so step *t+1* is
+dispatched BEFORE step *t*'s tokens are pulled to the host — detokenization,
+EOS checks, and admission bookkeeping overlap the device's next step. The
+speculation is exact: nothing is donated, so when the fetched tokens reveal
+a lane completion the in-flight step is discarded (key/caches/positions roll
+back) and re-run from the corrected lane composition — token streams are
+bitwise identical to the serial ``tick()`` loop. Completions driven by
+``max_new_tokens`` are host-predictable, so the server only speculates when
+no lane is at its budget; only surprise EOS tokens cost a rollback.
+
+Per-lane sampling arrays ride a :class:`repro.serving.sampler.SampCache`,
+invalidated on EVERY lane-composition change (admission, completion, and
+mid-flight :meth:`cancel`): a stale cache would hand a recycled lane the
+previous request's sampling params.
 """
 from __future__ import annotations
 
@@ -16,7 +32,7 @@ import numpy as np
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
-from repro.serving.sampler import SamplingParams, sample_lanes, stack_lane_params, static_flags
+from repro.serving.sampler import SampCache, SamplingParams, sample_lanes
 
 
 @dataclass
@@ -29,6 +45,7 @@ class Request:
     text: str = ""
     done: bool = False
     lane: int = -1
+    prompt_len: int = 0  # len(encode(prompt, bos=True)), set at admission
 
 
 class BatchServer:
@@ -56,8 +73,10 @@ class BatchServer:
         self._key = jax.random.key(seed)
         self._rid = 0
         # per-lane sampling arrays + static flags, rebuilt only when lane
-        # composition changes (admission / completion), not per token
-        self._samp_cache = None
+        # composition changes — every admission/completion/cancel must
+        # invalidate (see SampCache)
+        self._samp_cache = SampCache()
+        self.stats = {"steps": 0, "overlapped": 0, "rollbacks": 0}
 
         self._jit_prefill = jax.jit(
             lambda p, toks, c: model_lib.prefill(p, cfg, {"tokens": toks}, c, spec=self.spec)
@@ -77,6 +96,22 @@ class BatchServer:
         self.queue.append(Request(self._rid, prompt, max_new_tokens, sampling))
         return self._rid
 
+    def cancel(self, rid: int) -> bool:
+        """Retire a request mid-flight (queued or decoding). Freeing a lane
+        is a composition change: the samp cache must be invalidated so the
+        next admission rebuilds the stacked params — a recycled lane must
+        never inherit the cancelled request's sampling."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(i)
+                return True
+        for lane, req in enumerate(self.lanes):
+            if req is not None and req.rid == rid:
+                self.lanes[lane] = None
+                self._samp_cache.invalidate()
+                return True
+        return False
+
     def _admit(self):
         for lane in range(self.n_lanes):
             if self.lanes[lane] is None and self.queue:
@@ -93,47 +128,128 @@ class BatchServer:
                 )
                 req.tokens = list(ids)
                 req.lane = lane
+                req.prompt_len = len(ids)
                 self.positions[lane] = len(ids)
                 self.lanes[lane] = req
-                self._samp_cache = None
+                self._samp_cache.invalidate()
 
-    def tick(self):
-        self._admit()
-        if not any(self.lanes):
-            return
-        toks = jnp.asarray(
-            [r.tokens[-1] if r else 0 for r in self.lanes], jnp.int32
-        )
+    # ------------------------------------------------------------------
+    def _lane_params(self):
+        # empty lanes get the server default — their draws are discarded,
+        # so they must not force the greedy-argmax path on everyone else
+        return [(r.sampling or self.sampling) if r else self.sampling
+                for r in self.lanes]
+
+    def _step(self, toks):
+        """ONE batched decode + shared sampling dispatch. ``toks`` may be a
+        host list or the previous step's on-device sampled tokens (the
+        pipelined path — no host round-trip). Returns the sampled tokens as
+        a DEVICE array and advances the occupied lanes' positions."""
         pos = jnp.asarray(self.positions, jnp.int32)
         self._key, k = jax.random.split(self._key)
         logits, _, self.caches = self._jit_decode(self.params, toks, pos, self.caches)
-        if self._samp_cache is None:
-            # empty lanes get the server default — their draws are discarded,
-            # so they must not force the greedy-argmax path on everyone else
-            lane_sp = [(r.sampling or self.sampling) if r else self.sampling
-                       for r in self.lanes]
-            self._samp_cache = (stack_lane_params(lane_sp), *static_flags(lane_sp))
-        lanes_samp, use_filters, any_greedy = self._samp_cache
-        new = np.asarray(sample_lanes(
+        lanes_samp, use_filters, any_greedy = self._samp_cache.get(self._lane_params)
+        sampled = sample_lanes(
             k, logits, lanes_samp, use_filters=use_filters, any_greedy=any_greedy,
-        ))
+        )
+        for lane, req in enumerate(self.lanes):
+            if req is not None:
+                self.positions[lane] += 1
+        self.stats["steps"] += 1
+        return sampled
+
+    def _host_toks(self):
+        return jnp.asarray(
+            [r.tokens[-1] if r else 0 for r in self.lanes], jnp.int32
+        )
+
+    def _commit(self, new_np) -> bool:
+        """Apply one step's sampled tokens to the request views; returns
+        True when the lane composition changed (a request finished)."""
+        changed = False
         for lane, req in enumerate(self.lanes):
             if req is None:
                 continue
-            t = int(new[lane])
+            t = int(new_np[lane])
             req.tokens.append(t)
             req.text += self.tok.decode([t])
-            self.positions[lane] += 1
-            gen = len(req.tokens) - len(self.tok.encode(req.prompt, bos=True))
+            gen = len(req.tokens) - req.prompt_len
             if t == self.tok.eos_id or gen >= req.max_new_tokens:
                 req.done = True
                 self.finished.append(req)
                 self.lanes[lane] = None
-                self._samp_cache = None
+                self._samp_cache.invalidate()
+                changed = True
+        return changed
 
-    def run_until_done(self, max_ticks: int = 4096):
-        for _ in range(max_ticks):
-            if not self.queue and not any(self.lanes):
-                break
-            self.tick()
+    def _can_speculate(self) -> bool:
+        """The next step may be dispatched before this step's tokens reach
+        the host only if the composition provably cannot change: no queued
+        request waiting on a free lane, and no lane at its token budget.
+        EOS completions stay unpredictable — those cost a rollback instead.
+        """
+        if self.queue and any(r is None for r in self.lanes):
+            return False
+        for req in self.lanes:
+            if req is not None:
+                # generated count AFTER the in-flight step commits
+                if len(req.tokens) + 1 - req.prompt_len >= req.max_new_tokens:
+                    return False
+        return True
+
+    def tick(self):
+        """One serial step: decode, sample, pull tokens, commit."""
+        self._admit()
+        if not any(self.lanes):
+            return
+        self._commit(np.asarray(self._step(self._host_toks())))
+
+    def run_until_done(self, max_ticks: int = 4096, *, pipeline: bool = True):
+        """Drive admissions + decode until queue and lanes empty.
+
+        ``pipeline=True`` (default) keeps the sampled tokens on the device
+        and dispatches step *t+1* before step *t*'s host drain; a surprise
+        EOS rolls the un-donated speculative step back and re-runs it from
+        the corrected composition, so the streams match the serial loop
+        bitwise. ``pipeline=False`` is the serial reference."""
+        if not pipeline:
+            for _ in range(max_ticks):
+                if not self.queue and not any(self.lanes):
+                    break
+                self.tick()
+            return self.finished
+
+        occupied = lambda: jnp.asarray([r is not None for r in self.lanes])
+        inflight = None  # device tokens of the dispatched-but-undrained step
+        ticks = 0
+        while ticks < max_ticks:
+            if inflight is None:
+                self._admit()
+                if not any(self.lanes):
+                    break
+                inflight = self._step(self._host_toks())
+                ticks += 1
+                continue
+            if self._can_speculate():
+                # nothing donated: a held snapshot makes the speculative
+                # step exactly revocable
+                snap = (self._key, self.caches, self.positions.copy())
+                spec = self._step(jnp.where(occupied(), inflight, 0))
+                new_np = np.asarray(inflight)  # blocks on step t only
+                if self._commit(new_np):
+                    # surprise EOS: discard the in-flight step and re-enter
+                    # with the recycled composition
+                    self._key, self.caches, self.positions = snap
+                    self.stats["rollbacks"] += 1
+                    self.stats["steps"] -= 1
+                    inflight = None
+                else:
+                    self.stats["overlapped"] += 1
+                    inflight = spec
+                    ticks += 1
+            else:
+                self._commit(np.asarray(inflight))
+                inflight = None
+        if inflight is not None:
+            self._commit(np.asarray(inflight))
         return self.finished

@@ -9,5 +9,11 @@ from benchmarks import run as bench_run
 def test_bench_throughput_reduced_iteration():
     out = bench_run.smoke()
     # shape serialized by benchmarks/run.py into BENCH_throughput.json
-    assert set(out) == {"sync_every", "per_side"}
+    assert set(out) == {"sync_every", "per_side", "ab", "adaptive"}
     assert out["per_side"][2]["tick_s_mean"] >= out["per_side"][2]["tick_s"]
+    # serial vs pipelined A/B measures the same virtual ticks either way
+    assert out["ab"]["serial_tick_s"] > 0 and out["ab"]["pipelined_tick_s"] > 0
+    # the adaptive histogram's tick mass equals the ticks it advanced
+    # (window accounting can't silently drop or double-count dispatches)
+    hist = out["adaptive"]["window_hist"]
+    assert sum(w * c for w, c in hist.items()) == out["adaptive"]["ticks"]

@@ -1,0 +1,151 @@
+"""Sampler edge cases (ISSUE 5): degenerate filter settings, near-zero
+temperatures, and mixed greedy/filtered lanes must match the reference
+single-lane :func:`repro.serving.sampler.sample` semantics.
+
+Bitwise assertions where the contract is bitwise (greedy lanes, disabled
+filters encoded two ways); support assertions where the paths legitimately
+assign Gumbel noise differently (stochastic draws must land inside the
+reference path's allowed token set — and always do for every seed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import hypothesis_tools
+from repro.serving.sampler import (
+    SamplingParams, lane_params, sample, sample_lanes, stack_lane_params,
+)
+
+
+def _logits(key, b, v):
+    return jax.random.normal(jax.random.key(key), (b, v)) * 3.0
+
+
+def _ref_allowed(row: np.ndarray, p: SamplingParams) -> np.ndarray:
+    """Boolean support of the reference sample() path for one lane, numpy
+    mirror of its sequential top-k -> (renormalized) top-p filtering."""
+    v = row.shape[0]
+    if p.greedy or p.temperature <= 0.0:
+        out = np.zeros(v, bool)
+        out[int(np.argmax(row))] = True
+        return out
+    x = row / max(p.temperature, 1e-6)
+    if p.top_k > 0:
+        kth = np.sort(x)[::-1][min(p.top_k, v) - 1]
+        x = np.where(x < kth, -np.inf, x)
+    if p.top_p < 1.0:
+        s = np.sort(x)[::-1]
+        probs = np.exp(s - s.max())
+        probs = probs / probs.sum()
+        cum = np.cumsum(probs)
+        cutoff = s[int((cum < p.top_p).sum())]
+        x = np.where(x < cutoff, -np.inf, x)
+    return np.isfinite(x)
+
+
+def test_top_k_geq_vocab_equals_disabled_bitwise():
+    """top_k >= vocab is the same program as top_k=0 (disabled): identical
+    rank mask, identical Gumbel assignment, identical draw."""
+    logits = _logits(0, 4, 97)
+    a = stack_lane_params([SamplingParams(temperature=1.0, top_k=97)] * 4)
+    b = stack_lane_params([SamplingParams(temperature=1.0, top_k=0)] * 4)
+    c = stack_lane_params([SamplingParams(temperature=1.0, top_k=500)] * 4)
+    for seed in range(16):
+        key = jax.random.key(seed)
+        ta = sample_lanes(key, logits, a)
+        np.testing.assert_array_equal(np.asarray(ta),
+                                      np.asarray(sample_lanes(key, logits, b)))
+        np.testing.assert_array_equal(np.asarray(ta),
+                                      np.asarray(sample_lanes(key, logits, c)))
+
+
+def test_top_p_one_is_disabled_and_full_support():
+    """top_p=1.0 disables the nucleus filter: with a small vocab every token
+    stays reachable (including through the filtered program), matching the
+    reference path's full support."""
+    logits = jnp.zeros((1, 5))  # uniform: all tokens equally likely
+    lanes = stack_lane_params([SamplingParams(temperature=1.0, top_p=1.0)])
+    seen_filtered, seen_plain = set(), set()
+    for seed in range(64):
+        key = jax.random.key(seed)
+        seen_filtered.add(int(sample_lanes(key, logits, lanes, use_filters=True)[0]))
+        seen_plain.add(int(sample_lanes(key, logits, lanes, use_filters=False)[0]))
+    assert seen_filtered == seen_plain == set(range(5))
+
+
+def test_temperature_near_zero_equals_argmax():
+    """temperature -> 0+ must converge to argmax exactly (the clamp shared
+    with sample() keeps the scaled logits finite); temperature == 0 is the
+    greedy encoding. All four spellings agree bitwise."""
+    logits = _logits(3, 5, 211)
+    am = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    for t in (0.0, 1e-30, 1e-12, 1e-7):
+        lanes = stack_lane_params([SamplingParams(temperature=t)] * 5)
+        for seed in range(4):
+            got = np.asarray(sample_lanes(jax.random.key(seed), logits, lanes))
+            assert got.dtype == np.int32
+            np.testing.assert_array_equal(got, am, err_msg=f"t={t}")
+    greedy = stack_lane_params([SamplingParams(greedy=True)] * 5)
+    np.testing.assert_array_equal(
+        np.asarray(sample_lanes(jax.random.key(0), logits, greedy)), am
+    )
+
+
+def test_temperature_epsilon_matches_reference_sample():
+    """The clamp is the SAME clamp sample() applies, so the tiny-temperature
+    single-lane reference agrees token-for-token (both reduce to argmax)."""
+    logits = _logits(9, 3, 64)
+    for t in (1e-30, 1e-9):
+        ref = np.asarray(sample(jax.random.key(1), logits, SamplingParams(temperature=t)))
+        got = np.asarray(sample_lanes(
+            jax.random.key(1), logits, lane_params(SamplingParams(temperature=t), 3)
+        ))
+        np.testing.assert_array_equal(ref, got)
+
+
+def test_mixed_greedy_filtered_lanes_match_reference_support():
+    """One shared dispatch, four different lane policies: every draw lands
+    in that lane's reference-path support, and the greedy lane is bitwise
+    argmax for every seed (unaffected by its stochastic neighbors)."""
+    ps = [
+        SamplingParams(greedy=True),
+        SamplingParams(temperature=0.8, top_k=3),
+        SamplingParams(temperature=1.1, top_p=0.7),
+        SamplingParams(temperature=2.0),
+    ]
+    logits = _logits(7, len(ps), 89)
+    rows = np.asarray(logits)
+    allowed = [_ref_allowed(rows[i], p) for i, p in enumerate(ps)]
+    lanes = stack_lane_params(ps)
+    am0 = int(np.argmax(rows[0]))
+    for seed in range(64):
+        got = np.asarray(sample_lanes(jax.random.key(seed), logits, lanes))
+        assert int(got[0]) == am0
+        for i in range(len(ps)):
+            assert allowed[i][got[i]], (seed, i, got[i])
+    # the filters actually bite: top_k=3 must exclude most of the vocab
+    assert allowed[1].sum() == 3 and 0 < allowed[2].sum() < 89
+
+
+# ---------------------------------------------------------------------------
+# property-based edge sweep (hypothesis optional — gated via conftest)
+# ---------------------------------------------------------------------------
+given, settings, st = hypothesis_tools()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**20),
+    v=st.integers(min_value=4, max_value=160),
+    temp=st.sampled_from([0.0, 1e-9, 1e-6, 0.3, 1.0, 2.5]),
+    top_k=st.sampled_from([0, 1, 3, 7, 1000]),
+    top_p=st.sampled_from([1.0, 0.9, 0.4, 1e-6]),
+)
+def test_property_draws_stay_in_reference_support(seed, v, temp, top_k, top_p):
+    p = SamplingParams(temperature=temp, top_k=top_k, top_p=top_p)
+    logits = _logits(seed, 2, v)
+    rows = np.asarray(logits)
+    lanes = stack_lane_params([p, SamplingParams(greedy=True)])
+    got = np.asarray(sample_lanes(jax.random.key(seed ^ 0x5EED), logits, lanes))
+    allowed = _ref_allowed(rows[0], p)
+    assert allowed[got[0]], (got[0], np.flatnonzero(allowed))
+    assert int(got[1]) == int(np.argmax(rows[1]))
