@@ -1,0 +1,127 @@
+"""Lane-sharded macro-tick scaling — the ISSUE 6 per-lane-cost curve.
+
+Times the fused cortex window under ``shard_map`` on an 8-way ``lane`` mesh
+as ``n_side`` scales (64, 256 live; 1024 compiles via ``launch/dryrun.py
+--lane``). The claim being measured: side state shards over the mesh, so the
+marginal cost of a side lane (``per_lane_cost_s = tick_s / (1 + n_side)``)
+falls as lanes spread across devices instead of stacking on one.
+
+Must run in its OWN process: the forced-device-count XLA flag is read once
+at jax import, so this module keeps every jax import inside :func:`run` and
+the CLI sets ``XLA_FLAGS`` before touching it. ``benchmarks/run.py`` invokes
+it as a subprocess (``--lane``) and folds the JSON into
+``BENCH_throughput.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def force_host_devices(n: int = 8) -> None:
+    """Append the forced-device-count flag (idempotent). Call BEFORE any
+    jax import in the process — the flag is read once at backend init."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
+
+
+def run(n_sides=(64, 256), *, sync_every: int = 8, reps: int = 6,
+        warmup_windows: int = 2, mesh_devices: int = 8) -> dict:
+    import time
+
+    import jax
+
+    from benchmarks.common import emit
+    from repro.configs import get_config
+    from repro.core.engine import CortexEngine
+    from repro.core.prism import Prism
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.launch.mesh import make_lane_mesh
+    from repro.models import model as model_lib
+    from repro.serving.sampler import SamplingParams
+
+    if jax.device_count() < mesh_devices:
+        raise RuntimeError(
+            f"need {mesh_devices} devices, have {jax.device_count()} — "
+            "run via `python benchmarks/bench_lane_scale.py` (the CLI forces "
+            "the host device count) or set XLA_FLAGS yourself"
+        )
+    mesh = make_lane_mesh(mesh_devices)
+    cfg = get_config("qwen2.5-0.5b", reduced=True)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    tok = ByteTokenizer(cfg.vocab_size)
+
+    out = {
+        "lane_mesh_shape": [mesh_devices],
+        "sync_every": sync_every,
+        "per_n_side": {},
+    }
+    for n_side in n_sides:
+        eng = CortexEngine(
+            Prism(params, cfg), tok, n_main=1, max_side=n_side,
+            main_capacity=256, side_max_steps=100_000, inject_tokens=8,
+            theta=2.0,  # never merge: lane population stays fixed while timing
+            sampling=SamplingParams(temperature=1.0), sync_every=sync_every,
+            mesh=mesh,
+        )
+        m = eng.submit("lane scaling benchmark prompt", lane=0)
+        # fill every lane directly (a prompt carrying n_side task tags would
+        # blow the main context at 256 sides)
+        for i in range(n_side):
+            assert eng._spawn_side(m, f"think {i}") is not None, i
+        active = sum(s.active for s in eng.sides)
+        assert active == n_side, (active, n_side)
+        eng.run(warmup_windows * sync_every)  # compile macro tick + drain path
+        stats0 = dict(eng.stats)
+        dt = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            eng.run(sync_every)  # one fused window per timed chunk
+            jax.block_until_ready(eng.state.main_ring)
+            dt = min(dt, (time.perf_counter() - t0) / sync_every)
+        dticks = eng.stats["ticks"] - stats0["ticks"]
+        dispatches = eng.stats["tick_dispatches"] - stats0["tick_dispatches"]
+        assert dispatches * sync_every == dticks, (dispatches, dticks)
+        per_lane = dt / (1 + n_side)
+        emit(
+            f"lane_scale.sides_{n_side}",
+            dt * 1e6,
+            f"per_lane={per_lane*1e6:.1f}us mesh={mesh_devices} "
+            f"dispatches/tick={dispatches/dticks:.3f}",
+        )
+        out["per_n_side"][n_side] = {
+            "tick_s": dt,
+            "per_lane_cost_s": per_lane,
+            "active": active,
+            "dispatches_per_tick": dispatches / dticks,
+        }
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI variant: n_side=8, short windows")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    args = ap.parse_args()
+
+    force_host_devices(8)
+    # support `python benchmarks/bench_lane_scale.py` from the repo root
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, root)
+    sys.path.insert(0, os.path.join(root, "src"))
+
+    if args.smoke:
+        res = run(n_sides=(8,), sync_every=4, reps=2, warmup_windows=1)
+    else:
+        res = run()
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)

@@ -6,13 +6,45 @@ Prints ``name,us_per_call,derived`` CSV rows. Roofline/dry-run artifacts
 
 ``--smoke`` runs one reduced throughput iteration (CI-sized: a couple of
 macro windows) and checks the macro-tick dispatch accounting without
-touching the recorded BENCH_throughput.json baseline.
+touching the recorded BENCH_throughput.json baseline. ``--lane`` adds the
+lane-sharded curve (bench_lane_scale) — a subprocess, because the forced
+host-device count must be set before jax imports.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lane_bench(smoke: bool) -> dict:
+    """Run bench_lane_scale in a forced-8-device subprocess and load its
+    JSON. The parent process stays single-device (its jax backend is
+    already initialized), so the lane curve cannot run in-process."""
+    name = "bench_lane_smoke.json" if smoke else "bench_lane.json"
+    out_path = os.path.join(ROOT, "benchmarks", "artifacts", name)
+    cmd = [sys.executable, os.path.join(ROOT, "benchmarks", "bench_lane_scale.py"),
+           "--out", out_path] + (["--smoke"] if smoke else [])
+    subprocess.run(cmd, check=True, cwd=ROOT)
+    with open(out_path) as f:
+        return json.load(f)
+
+
+def lane_smoke() -> dict:
+    """CI gate for the sharded path: the curve must come off a real 8-way
+    lane mesh with the macro-tick dispatch accounting intact."""
+    res = lane_bench(smoke=True)
+    assert res["lane_mesh_shape"] == [8], res
+    for n_side, row in res["per_n_side"].items():
+        assert row["tick_s"] > 0
+        assert row["per_lane_cost_s"] > 0
+        assert row["dispatches_per_tick"] == 1.0 / res["sync_every"], (n_side, row)
+    print("smoke,ok,lane-sharded dispatch accounting verified")
+    return res
 
 
 def smoke() -> dict:
@@ -76,17 +108,27 @@ def main() -> None:
     # the recorded baseline with a failed run.
     throughput = results.get("throughput", {})
     if throughput and "error" not in throughput:
-        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        with open(os.path.join(root, "BENCH_throughput.json"), "w") as f:
+        try:
+            lane = lane_bench(smoke=False)
+            throughput["lane_mesh_shape"] = lane["lane_mesh_shape"]
+            throughput["lane_scale"] = lane["per_n_side"]
+        except Exception as e:
+            print(f"lane_scale,0,FAILED:{type(e).__name__}:{e}")
+        with open(os.path.join(ROOT, "BENCH_throughput.json"), "w") as f:
             json.dump(throughput, f, indent=1, default=str)
 
 
 if __name__ == "__main__":
-    import sys
-
     # support `python benchmarks/run.py` (CI) as well as `-m benchmarks.run`
-    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    sys.path.insert(0, ROOT)
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="reduced CI pass; no baseline rewrite")
+    ap.add_argument("--lane", action="store_true",
+                    help="with --smoke: add the forced-8-device lane-mesh curve")
     args = ap.parse_args()
-    smoke() if args.smoke else main()
+    if args.smoke:
+        smoke()
+        if args.lane:
+            lane_smoke()
+    else:
+        main()

@@ -78,6 +78,7 @@ import numpy as np
 
 from repro.core import injection
 from repro.core import synapse as synapse_lib
+from repro.core import synapse_sharded as sharded_lib
 from repro.core.prism import Prism, tree_bytes
 from repro.core.router import CortexRouter
 from repro.data.tokenizer import ByteTokenizer
@@ -172,6 +173,47 @@ class TickState:
 jax.tree_util.register_dataclass(
     TickState, data_fields=[f for f in TickState.__dataclass_fields__], meta_fields=[]
 )
+
+
+def init_tick_state(
+    cfg: ModelConfig,
+    *,
+    n_main: int,
+    max_side: int,
+    main_spec: model_lib.CacheSpec,
+    side_spec: model_lib.CacheSpec,
+    ring_capacity: int,
+    side_prompt_cap: int,
+    main_sampling: SamplingParams,
+    side_sampling: SamplingParams,
+    seed: int = 0,
+) -> TickState:
+    """Fresh TickState for an engine (module-level so launch tooling can
+    ``jax.eval_shape`` the exact state the engine would build — the dry-run
+    lowers the 1024-lane macro tick without materializing 1024 caches)."""
+    d = cfg.d_model
+    M, S, R, P = n_main, max_side, ring_capacity, side_prompt_cap
+    return TickState(
+        key=jax.random.key(seed, impl="rbg"),  # cheap per-tick key chain on CPU
+        cursor=jnp.zeros((), jnp.int32),
+        main_tok=jnp.zeros((M,), jnp.int32),
+        main_pos=jnp.zeros((M,), jnp.int32),
+        main_active=jnp.zeros((M,), bool),
+        main_hidden=jnp.zeros((M, d), jnp.float32),
+        main_ring=jnp.full((M, R), -1, jnp.int32),
+        main_samp=lane_params(main_sampling, M),
+        main_caches=model_lib.init_caches(cfg, M, main_spec),
+        side_tok=jnp.zeros((S,), jnp.int32),
+        side_pos=jnp.zeros((S,), jnp.int32),
+        side_active=jnp.zeros((S,), bool),
+        side_step=jnp.zeros((S,), jnp.int32),
+        side_plen=jnp.zeros((S,), jnp.int32),
+        side_prompt=jnp.zeros((S, P), jnp.int32),
+        side_hidden=jnp.zeros((S, d), jnp.float32),
+        side_ring=jnp.full((S, R), -1, jnp.int32),
+        side_samp=lane_params(side_sampling, S),
+        side_caches=model_lib.init_caches(cfg, S, side_spec),
+    )
 
 
 def _one_tick(
@@ -430,7 +472,16 @@ class CortexEngine:
         pipeline: bool = True,
         side_prompt_cap: int = 64,
         compute_dtype: str | None = None,
+        mesh=None,
     ):
+        """``mesh``: a lane mesh (see ``launch.mesh.make_lane_mesh``) shards
+        every side-lane TickState leaf over its ``lane`` axis and runs the
+        macro tick under ``shard_map`` — side agents scale with the mesh
+        while main-stream state stays replicated (each device steps the
+        river redundantly; rivers are the cheap part of the topology).
+        ``max_side`` must be a multiple of the lane-axis size. Greedy token
+        streams are bitwise identical to the ``mesh=None`` engine; every
+        dispatch/donation/zero-sync invariant holds unchanged."""
         self.prism = prism
         cfg = prism.cfg
         # Serving dtype policy: CPU has no native bf16 — XLA emulates it with
@@ -471,10 +522,32 @@ class CortexEngine:
             tail=max(256, 8 * self.max_window, side_prompt_cap + 16)
         )
 
+        # lane mesh: detect the axis up front — the side spec's attend policy
+        # depends on it (threaded through the CacheSpec, not a module global)
+        self.mesh = mesh
+        self.lane_axis = None
+        if mesh is not None and "lane" in getattr(mesh, "axis_names", ()):
+            self.lane_axis = "lane"
+            lanes = mesh.shape["lane"]
+            if max_side % lanes != 0:
+                raise ValueError(
+                    f"max_side={max_side} must be a multiple of the lane-axis "
+                    f"size {lanes} (every side leaf shards the same lane dim)"
+                )
+
         self.main_spec = model_lib.CacheSpec(kind="full", capacity=main_capacity)
-        self.side_spec = side_spec or model_lib.CacheSpec(
+        base_side_spec = side_spec or model_lib.CacheSpec(
             kind="synapse", n_landmarks=64, window=64, n_inject=inject_tokens
         )
+        if self.lane_axis is not None and base_side_spec.policy.attend_impl == "pallas":
+            # under the lane shard_map each device attends over its LOCAL
+            # lanes: route through piece_attend, whose local path is the
+            # same fused kernels.ops attend — bitwise parity preserved
+            base_side_spec = dataclasses.replace(
+                base_side_spec,
+                policy=dataclasses.replace(base_side_spec.policy, attend_impl="piece"),
+            )
+        self.side_spec = base_side_spec
         self.n_main, self.max_side = n_main, max_side
         self.mains = [AgentView(f"main{i}", i, "main") for i in range(n_main)]
         self.sides = [AgentView(f"side{i}", i, "side") for i in range(max_side)]
@@ -499,30 +572,29 @@ class CortexEngine:
         # inside decode becomes an identity XLA elides). The Prism's master
         # copy stays authoritative for accounting/training.
         self._params = model_lib.cast_params(prism.params, cfg)
-        d = cfg.d_model
         # rings must hold the longest adaptive window, not just sync_every
-        M, S, R, P = n_main, max_side, self.max_window, side_prompt_cap
-        self.state = TickState(
-            key=jax.random.key(seed, impl="rbg"),  # cheap per-tick key chain on CPU
-            cursor=jnp.zeros((), jnp.int32),
-            main_tok=jnp.zeros((M,), jnp.int32),
-            main_pos=jnp.zeros((M,), jnp.int32),
-            main_active=jnp.zeros((M,), bool),
-            main_hidden=jnp.zeros((M, d), jnp.float32),
-            main_ring=jnp.full((M, R), -1, jnp.int32),
-            main_samp=lane_params(self.sampling, M),
-            main_caches=model_lib.init_caches(cfg, M, self.main_spec),
-            side_tok=jnp.zeros((S,), jnp.int32),
-            side_pos=jnp.zeros((S,), jnp.int32),
-            side_active=jnp.zeros((S,), bool),
-            side_step=jnp.zeros((S,), jnp.int32),
-            side_plen=jnp.zeros((S,), jnp.int32),
-            side_prompt=jnp.zeros((S, P), jnp.int32),
-            side_hidden=jnp.zeros((S, d), jnp.float32),
-            side_ring=jnp.full((S, R), -1, jnp.int32),
-            side_samp=lane_params(self.side_sampling, S),
-            side_caches=model_lib.init_caches(cfg, S, self.side_spec),
+        self.state = init_tick_state(
+            cfg, n_main=n_main, max_side=max_side, main_spec=self.main_spec,
+            side_spec=self.side_spec, ring_capacity=self.max_window,
+            side_prompt_cap=side_prompt_cap, main_sampling=self.sampling,
+            side_sampling=self.side_sampling, seed=seed,
         )
+
+        # lane placement: side leaves shard over the mesh, main/key/cursor
+        # and the weights replicate. Committing everything up front keeps
+        # the macro dispatch transfer-free (the zero-host-sync invariant).
+        self._rep_sharding = None
+        self._state_specs = None
+        if self.lane_axis is not None:
+            from repro.launch import sharding as shard_rules
+
+            self._state_specs = shard_rules.tick_state_specs(self.state, mesh)
+            self._state_shardings = shard_rules.shardings_for(self._state_specs, mesh)
+            self._rep_sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()
+            )
+            self.state = jax.device_put(self.state, self._state_shardings)
+            self._params = jax.device_put(self._params, self._rep_sharding)
 
         # Small stacks trace faster through lax.scan but *run* faster
         # unrolled on CPU (no while-loop thunks, cross-layer fusion); deep
@@ -537,40 +609,76 @@ class CortexEngine:
         # compile lazily, cached by (n_ticks, step_sides, sampler flags).
         self._jcfg = jcfg
         self._jit_macro: dict[tuple[int, bool, bool, bool], object] = {}
-        self._jit_prefill_lane = jax.jit(
+
+        # drain-time jits. On a lane mesh every output sharding is pinned
+        # explicitly (replicated or the TickState leaf's lane spec) so the
+        # donated buffers alias and the next macro dispatch sees exactly the
+        # shardings it compiled for — GSPMD would otherwise be free to pick
+        # different output shardings and break donation or force resharding.
+        rep, ssh = self._rep_sharding, getattr(self, "_state_shardings", None)
+
+        def _jit(fn, donate, out=None):
+            if self.lane_axis is not None and out is not None:
+                return jax.jit(fn, donate_argnums=donate, out_shardings=out)
+            return jax.jit(fn, donate_argnums=donate)
+
+        self._jit_prefill_lane = _jit(
             lambda p, toks, c, lane: model_lib.prefill_lane(
                 p, jcfg, {"tokens": toks}, c, lane, spec=self.main_spec
             ),
-            donate_argnums=(2,),
+            (2,),
+            (rep, rep, ssh.main_caches) if ssh else None,
         )
-        self._jit_spawn = jax.jit(
-            partial(_spawn_lane, jcfg, self.side_spec), donate_argnums=(1,)
+        self._jit_spawn = _jit(
+            partial(_spawn_lane, jcfg, self.side_spec), (1,),
+            ssh.side_caches if ssh else None,
         )
-        self._jit_merge = jax.jit(
+        self._jit_merge = _jit(
             lambda p, mc, mh, toks, vpos, mask: injection.merge_thought(
                 p, jcfg, mc, mh, toks, vpos, mask, self.theta
             ),
-            donate_argnums=(1,),
+            (1,),
+            (ssh.main_caches, rep, rep) if ssh else None,
         )
-        self._jit_admit_main = jax.jit(_admit_main_fields, donate_argnums=(0, 1, 2, 3, 4))
-        self._jit_admit_side = jax.jit(_admit_side_fields, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
-        self._jit_retire_side = jax.jit(
-            lambda act_a, lane: act_a.at[lane].set(False), donate_argnums=(0,)
+        self._jit_admit_main = _jit(
+            _admit_main_fields, (0, 1, 2, 3, 4),
+            (ssh.main_tok, ssh.main_pos, ssh.main_active, ssh.main_hidden,
+             ssh.main_samp) if ssh else None,
+        )
+        self._jit_admit_side = _jit(
+            _admit_side_fields, (0, 1, 2, 3, 4, 5, 6),
+            (ssh.side_prompt, ssh.side_plen, ssh.side_step, ssh.side_tok,
+             ssh.side_pos, ssh.side_active, ssh.side_samp) if ssh else None,
+        )
+        self._jit_retire_side = _jit(
+            lambda act_a, lane: act_a.at[lane].set(False), (0,),
+            ssh.side_active if ssh else None,
         )
 
     def _macro_fn(self, n_ticks: int, step_sides: bool, use_filters: bool, any_greedy: bool):
-        """Jitted fused_tick variant for an ``n_ticks``-long window."""
+        """Jitted fused_tick variant for an ``n_ticks``-long window.
+
+        On a lane mesh the whole window body runs under ``shard_map``: each
+        device scans its local side-lane shard (caches, rings, sampling
+        arrays, budgets) while stepping the replicated river redundantly —
+        still ONE donated dispatch, still zero host syncs. The PRNG key is a
+        replicated carry, so greedy lanes stay bitwise identical to the
+        single-device engine no matter how lanes are placed."""
         key = (n_ticks, step_sides, use_filters, any_greedy)
         if key not in self._jit_macro:
-            self._jit_macro[key] = jax.jit(
-                partial(
-                    fused_tick, cfg=self._jcfg, main_spec=self.main_spec,
-                    side_spec=self.side_spec, step_sides=step_sides,
-                    use_filters=use_filters, any_greedy=any_greedy,
-                    n_ticks=n_ticks,
-                ),
-                donate_argnums=(1,),
+            fn = partial(
+                fused_tick, cfg=self._jcfg, main_spec=self.main_spec,
+                side_spec=self.side_spec, step_sides=step_sides,
+                use_filters=use_filters, any_greedy=any_greedy,
+                n_ticks=n_ticks,
             )
+            if self.lane_axis is not None:
+                fn = sharded_lib.shard_map_nocheck(
+                    fn, self.mesh,
+                    in_specs=(jax.sharding.PartitionSpec(), self._state_specs),
+                    out_specs=self._state_specs,
+                )
+            self._jit_macro[key] = jax.jit(fn, donate_argnums=(1,))
         return self._jit_macro[key]
 
     def _sampler_flags(self, step_sides: bool) -> tuple[bool, bool]:
@@ -585,6 +693,13 @@ class CortexEngine:
         if step_sides:
             ps += [self._side_sp[s.lane] for s in self.sides if s.active]
         return static_flags(ps)
+
+    @property
+    def lane_mesh_shape(self) -> tuple[int, ...] | None:
+        """Device-mesh shape when lane-sharded (recorded by the benches)."""
+        if self.mesh is None:
+            return None
+        return tuple(int(s) for s in self.mesh.devices.shape)
 
     # -- legacy views over the device state --------------------------------
     @property
@@ -867,7 +982,13 @@ class CortexEngine:
         rings = jax.device_get((self.state.main_ring, self.state.side_ring))
         self.stats["host_syncs"] += 1
         self._pending = 0
-        self.state = dataclasses.replace(self.state, cursor=jnp.zeros((), jnp.int32))
+        zero = jnp.zeros((), jnp.int32)
+        if self._rep_sharding is not None:
+            # a FRESH committed replicated zero each drain: the previous one
+            # was donated to the last macro dispatch, and an uncommitted
+            # scalar would trip the window's transfer guard at dispatch time
+            zero = jax.device_put(zero, self._rep_sharding)
+        self.state = dataclasses.replace(self.state, cursor=zero)
         return rings
 
     def _postprocess(self, rings, n: int, *, overlapped: bool = False):

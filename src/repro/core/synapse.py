@@ -46,6 +46,13 @@ class SynapsePolicy:
     # interpret mode on CPU); "piece" = synapse_sharded.piece_attend (the
     # multi-chip flash-decode). A live shard axis always forces "piece".
     attend_impl: str = "pallas"
+    # mesh axis the synapse token dims are sharded over (None = local). The
+    # engine-owned replacement for the old synapse_sharded.set_shard_axis
+    # module global: the policy rides the CacheSpec through decode_step into
+    # kernels.ops.synapse_attend, so shard placement is scoped to the trace
+    # that owns it. (The engine's LANE sharding keeps this None — lanes are
+    # split across devices, each lane's token dims stay local.)
+    shard_axis: str | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -87,26 +94,13 @@ def kernel_density(q, keys, valid):
 
 
 def _attend(q1, pieces, valids, scale, policy: SynapsePolicy):
-    """Attend over [landmarks; window; inject] k/v pieces.
-
-    Default: ONE fused Pallas kernel (kernels.ops.synapse_attention) over the
-    concatenated token set — the synapse buffers are read exactly once per
-    step. Fallback: synapse_sharded.piece_attend when the token dim is
-    sharded across chips (or policy.attend_impl == "piece").
-    Returns (out [B,H,D], masses — one [B,T_i] per piece).
-    """
-    if policy.attend_impl == "piece" or sharded.get_shard_axis() is not None:
-        return sharded.piece_attend(q1, pieces, valids, scale)
+    """Attend over [landmarks; window; inject] k/v pieces — delegates to
+    :func:`repro.kernels.ops.synapse_attend`, which routes on the policy
+    (fused Pallas attend vs the token-sharded flash-decode piece_attend).
+    Returns (out [B,H,D], masses — one [B,T_i] per piece)."""
     from repro.kernels import ops
 
-    sizes = [k.shape[1] for k, _ in pieces]
-    k_all = jnp.concatenate([k for k, _ in pieces], axis=1)
-    v_all = jnp.concatenate([v for _, v in pieces], axis=1)
-    valid_all = jnp.concatenate(list(valids), axis=1)
-    out, mass = ops.synapse_attention(q1, k_all, v_all, valid_all, scale=scale)
-    splits = [sum(sizes[: i + 1]) for i in range(len(sizes) - 1)]
-    masses = jnp.split(mass, splits, axis=1)
-    return out, list(masses)
+    return ops.synapse_attend(q1, pieces, valids, scale=scale, policy=policy)
 
 
 # ---------------------------------------------------------------------------

@@ -13,32 +13,85 @@ pair qwen3-8b x long_500k):
    gather; a shard_map flash-decode (local partial max/sum + psum combine)
    moves only [B,Hkv,G]-sized statistics across chips instead of the
    buffers themselves.
+
+Shard placement is SCOPED, not global: callers either pass an explicit
+:class:`ShardContext` (the engine threads one via its ``SynapsePolicy``) or
+enter :func:`token_sharding` around tracing (the dry-run). The old
+``set_shard_axis`` module global is gone — a test or launch script that set
+it would leak interpreter-wide state into every later trace.
 """
 from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from contextvars import ContextVar
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:  # jax >= 0.6: public jax.shard_map, replication check spelled check_vma
+    from jax import shard_map as _shard_map
+
+    _SM_NOCHECK = {"check_vma": False}
+except ImportError:  # jax <= 0.5: experimental module, spelled check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SM_NOCHECK = {"check_rep": False}
+
 NEG_INF = -1e30
 
-# Mesh axis the synapse token dims are sharded over (set by launch entry
-# points before tracing under a mesh; None = single-device / engine path).
-_SHARD_AXIS = None
-_MESH = None
+
+def shard_map_nocheck(fn, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with the replication check disabled
+    (the engine's macro tick mixes replicated main-lane state with
+    lane-sharded side state — the static checker cannot prove that)."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **_SM_NOCHECK)
 
 
-def set_shard_axis(axis: str | None, mesh=None):
-    global _SHARD_AXIS, _MESH
-    _SHARD_AXIS = axis
-    _MESH = mesh
+@dataclasses.dataclass(frozen=True)
+class ShardContext:
+    """Token-shard placement for the synapse buffers: the mesh axis their
+    token dims are split over (None = everything local) plus the mesh that
+    owns the axis (required whenever ``axis`` is set)."""
+
+    axis: str | None = None
+    mesh: object | None = None
 
 
-def get_shard_axis():
-    return _SHARD_AXIS
+_CTX: ContextVar[ShardContext] = ContextVar(
+    "synapse_shard_ctx", default=ShardContext()
+)
 
 
-def onehot_write(buf, slot, new, mask=None):
+@contextlib.contextmanager
+def token_sharding(axis: str | None, mesh=None):
+    """Scoped token-shard placement for code that cannot thread an explicit
+    :class:`ShardContext` (e.g. the dry-run tracing a whole decode step).
+    Always restores the previous context on exit, even on error — the
+    leak-proof replacement for the old ``set_shard_axis`` global."""
+    token = _CTX.set(ShardContext(axis, mesh))
+    try:
+        yield _CTX.get()
+    finally:
+        _CTX.reset(token)
+
+
+def current_context() -> ShardContext:
+    return _CTX.get()
+
+
+def get_shard_axis() -> str | None:
+    return _CTX.get().axis
+
+
+def _resolve(ctx: ShardContext | None) -> ShardContext:
+    return _CTX.get() if ctx is None else ctx
+
+
+def onehot_write(buf, slot, new, mask=None, *, ctx: ShardContext | None = None):
     """buf [B,T,...] <- new [B,...] at per-lane `slot`, via one-hot select.
 
     Single-device (no shard axis — the engine hot path): a plain per-lane
@@ -47,7 +100,7 @@ def onehot_write(buf, slot, new, mask=None):
     out-of-range slots while a scatter would clamp) but without
     materializing [B,T]-shaped masks for every ring write of every layer
     of every virtual tick."""
-    if _SHARD_AXIS is None:
+    if _resolve(ctx).axis is None:
         lane = jnp.arange(buf.shape[0])
         val = new.astype(buf.dtype)
         if mask is not None:
@@ -63,11 +116,11 @@ def onehot_write(buf, slot, new, mask=None):
     return jnp.where(oh, new[:, None].astype(buf.dtype), buf)
 
 
-def onehot_read(buf, slot):
+def onehot_read(buf, slot, *, ctx: ShardContext | None = None):
     """buf [B,T,...] -> [B,...] at per-lane slot (one-hot contraction; plain
     per-lane gather when no shard axis is live — exact for f32/int32 and
     in-bounds slots, so the two formulations are interchangeable there)."""
-    if _SHARD_AXIS is None:
+    if _resolve(ctx).axis is None:
         return buf[jnp.arange(buf.shape[0]), slot]
     T = buf.shape[1]
     oh = jax.nn.one_hot(slot, T, dtype=jnp.float32)
@@ -75,21 +128,36 @@ def onehot_read(buf, slot):
     return out.astype(buf.dtype)
 
 
-def piece_attend(q, pieces, valids, scale):
+def piece_attend(q, pieces, valids, scale, *, ctx: ShardContext | None = None):
     """Flash-decode attend over token-sharded (k, v) pieces.
 
     q: [B,H,D]; pieces: [(k_i, v_i)] with k_i/v_i [B,T_i,Hkv,D] sharded on
-    T_i over the configured axis; valids: [(B,T_i)] bools.
+    T_i over ``ctx.axis``; valids: [(B,T_i)] bools.
     Returns (out [B,H,D], masses [(B,T_i)] — per-key probability mass).
-    Falls back to a plain local computation when no shard axis is set.
+
+    No shard axis (the lane-sharded engine's per-shard body, and the
+    single-device fallback): ONE fused ``kernels.ops.synapse_attention``
+    call over the concatenated set — the exact computation of the default
+    "pallas" attend, so lane-sharded and single-device engines stay BITWISE
+    identical (tests/test_lane_sharded.py pins this).
     """
-    axis = _SHARD_AXIS
+    axis = _resolve(ctx).axis
     B, H, D = q.shape
     Hkv = pieces[0][0].shape[2]
     G = H // Hkv
     sizes = [k.shape[1] for k, _ in pieces]
 
-    def body(q, *flat, use_psum: bool):
+    if axis is None:
+        from repro.kernels import ops  # deferred: keeps core importable alone
+
+        k_all = jnp.concatenate([k for k, _ in pieces], axis=1)
+        v_all = jnp.concatenate([v for _, v in pieces], axis=1)
+        valid_all = jnp.concatenate(list(valids), axis=1)
+        out, mass = ops.synapse_attention(q, k_all, v_all, valid_all, scale=scale)
+        splits = list(np.cumsum(sizes))[:-1]
+        return out, list(jnp.split(mass, splits, axis=1))
+
+    def body(q, *flat):
         n = len(pieces)
         ks, vs, ms = flat[:n], flat[n : 2 * n], flat[2 * n :]
         k_loc = jnp.concatenate(ks, axis=1)
@@ -98,41 +166,28 @@ def piece_attend(q, pieces, valids, scale):
         qg = q.reshape(B, Hkv, G, D)
         s = jnp.einsum("bkgd,btkd->bkgt", qg, k_loc).astype(jnp.float32) * scale
         s = jnp.where(valid_loc[:, None, None, :], s, NEG_INF)
-        m_loc = jnp.max(s, axis=-1)
-        m = jax.lax.pmax(m_loc, axis) if use_psum else m_loc
+        m = jax.lax.pmax(jnp.max(s, axis=-1), axis)
         e = jnp.exp(s - m[..., None])
-        denom = jnp.sum(e, axis=-1)
-        if use_psum:
-            denom = jax.lax.psum(denom, axis)
+        denom = jax.lax.psum(jnp.sum(e, axis=-1), axis)
         p = e / denom[..., None]
-        out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_loc.dtype), v_loc)
-        if use_psum:
-            out = jax.lax.psum(out, axis)
+        out = jax.lax.psum(
+            jnp.einsum("bkgt,btkd->bkgd", p.astype(v_loc.dtype), v_loc), axis
+        )
         mass_loc = p.sum(axis=(1, 2))
-        local_sizes = [k.shape[1] for k in ks]
-        splits = list(np.cumsum(local_sizes))[:-1]
+        splits = list(np.cumsum([k.shape[1] for k in ks]))[:-1]
         masses = jnp.split(mass_loc, splits, axis=1)
         return (out.reshape(B, H, D), *masses)
 
-    flat = [k for k, _ in pieces] + [v for _, v in pieces] + list(valids)
-    if axis is None:
-        res = body(q, *flat, use_psum=False)
-        return res[0], list(res[1:])
-
     from jax.sharding import PartitionSpec as P
 
+    mesh = _resolve(ctx).mesh
+    if mesh is None:
+        raise ValueError("piece_attend: ShardContext has an axis but no mesh")
     tok = P(None, axis, None, None)
     tokm = P(None, axis)
     rep3 = P(None, None, None)
     in_specs = (rep3, *([tok] * len(pieces)), *([tok] * len(pieces)), *([tokm] * len(pieces)))
     out_specs = (rep3, *([tokm] * len(pieces)))
-    import functools
-
-    res = jax.shard_map(
-        functools.partial(body, use_psum=True),
-        mesh=_MESH,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        check_vma=False,
-    )(q, *flat)
+    flat = [k for k, _ in pieces] + [v for _, v in pieces] + list(valids)
+    res = shard_map_nocheck(body, mesh, in_specs, out_specs)(q, *flat)
     return res[0], list(res[1:])

@@ -74,6 +74,39 @@ def synapse_attention(q, keys, values, valid, *, scale: float | None = None, int
     return out[:, :, :D], mass[:, :T]
 
 
+def synapse_attend(q, pieces, valids, *, scale: float | None = None, policy=None):
+    """Policy-routed attend over [landmarks; window; inject] k/v pieces —
+    the single entry the synapse decode calls, threading the engine-owned
+    ``SynapsePolicy`` (no module globals).
+
+    Routing: a live token-shard axis — from ``policy.shard_axis`` or an
+    enclosing :func:`repro.core.synapse_sharded.token_sharding` scope — or
+    ``policy.attend_impl == "piece"`` selects the flash-decode
+    ``piece_attend`` path; otherwise ONE fused :func:`synapse_attention`
+    over the concatenated token set. Both paths reduce to the identical
+    fused computation when no axis is live, so the choice never perturbs
+    token streams (the lane-sharded engine's bitwise-parity contract).
+    Returns (out [B,H,D], masses — one [B,T_i] per piece).
+    """
+    from repro.core import synapse_sharded as sharded  # deferred: no cycle
+
+    ctx = sharded.current_context()
+    p_axis = getattr(policy, "shard_axis", None)
+    if p_axis is not None:
+        ctx = sharded.ShardContext(p_axis, ctx.mesh)
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    if ctx.axis is not None or getattr(policy, "attend_impl", "pallas") == "piece":
+        return sharded.piece_attend(q, pieces, valids, scale, ctx=ctx)
+    sizes = [k.shape[1] for k, _ in pieces]
+    k_all = jnp.concatenate([k for k, _ in pieces], axis=1)
+    v_all = jnp.concatenate([v for _, v in pieces], axis=1)
+    valid_all = jnp.concatenate(list(valids), axis=1)
+    out, mass = synapse_attention(q, k_all, v_all, valid_all, scale=scale)
+    splits = [sum(sizes[: i + 1]) for i in range(len(sizes) - 1)]
+    return out, list(jnp.split(mass, splits, axis=1))
+
+
 @partial(jax.jit, static_argnames=("interpret", "block_t"))
 def landmark_score(q, keys, landmarks=None, valid=None, *, block_t: int = 512, interpret: bool | None = None):
     """Returns (density [B,T] — per-head softmax mass summed over heads,

@@ -18,6 +18,8 @@ os.environ["XLA_FLAGS"] = (
 ).strip()
 
 import argparse
+import dataclasses
+import functools
 import json
 import re
 import time
@@ -173,11 +175,18 @@ def build_lowerable(arch: str, shape_name: str, mesh, *, act_mode: str = "auto",
     else:
         # sequence-parallel layer-boundary saves (Megatron-SP style)
         model_lib.set_activation_sharding(P(dp, "model", None))
-    # flash-decode shard_map attend over token-sharded synapse buffers
-    synapse_sharded.set_shard_axis(
-        "model" if (plan.cache_kind == "synapse" and synapse_token_shard) else None,
-        mesh=mesh,
-    )
+    # flash-decode shard_map attend over token-sharded synapse buffers: the
+    # scoped token_sharding context must be LIVE while the fn traces (the
+    # jit.lower call happens in run_one), so wrap rather than set globally
+    tok_axis = "model" if (plan.cache_kind == "synapse" and synapse_token_shard) else None
+
+    def _scoped(fn):
+        @functools.wraps(fn)
+        def wrapped(*a, **k):
+            with synapse_sharded.token_sharding(tok_axis, mesh=mesh):
+                return fn(*a, **k)
+
+        return wrapped
 
     if plan.kind == "train":
         state_abs = abstract_train_state(cfg)
@@ -185,7 +194,7 @@ def build_lowerable(arch: str, shape_name: str, mesh, *, act_mode: str = "auto",
         state_spec = shard_lib.param_specs(state_abs, cfg, mesh, fsdp_on=fsdp_on)
         batch_spec = shard_lib.batch_specs(batch_abs, cfg, mesh)
         opt_cfg = AdamWConfig()
-        step_fn = make_train_step(cfg, opt_cfg)
+        step_fn = _scoped(make_train_step(cfg, opt_cfg))
         out_spec = (state_spec, jax.tree.map(lambda _: P(), {
             "loss": 0, "ce": 0, "lb_loss": 0, "drop_frac": 0, "grad_norm": 0, "lr": 0}))
         return step_fn, (state_abs, batch_abs), (state_spec, batch_spec), out_spec, plan
@@ -197,12 +206,12 @@ def build_lowerable(arch: str, shape_name: str, mesh, *, act_mode: str = "auto",
         inputs_abs, cache_spec = specs_lib.input_specs(cfg, plan)
         inputs_spec = shard_lib.batch_specs(inputs_abs, cfg, mesh)
         if cfg.is_encoder_only:
-            fn = lambda p, i: model_lib.forward(p, cfg, i)
+            fn = _scoped(lambda p, i: model_lib.forward(p, cfg, i))
             out = (params_spec, inputs_spec)
             return fn, (params_abs, inputs_abs), out, (P(), {"lb_loss": P(), "drop_frac": P(), "hidden_last": P()}), plan
         caches_abs = jax.eval_shape(lambda: model_lib.init_caches(cfg, plan.batch, cache_spec))
         caches_spec = shard_lib.cache_specs(caches_abs, cfg, mesh, synapse_token_shard=synapse_token_shard)
-        fn = lambda p, i, c: model_lib.prefill(p, cfg, i, c, spec=cache_spec)
+        fn = _scoped(lambda p, i, c: model_lib.prefill(p, cfg, i, c, spec=cache_spec))
         out_spec = (
             shard_lib.fit_spec(mesh, (plan.batch, cfg.vocab_size), [dp, None]),
             shard_lib.fit_spec(mesh, (plan.batch, cfg.d_model), [dp, None]),
@@ -221,7 +230,7 @@ def build_lowerable(arch: str, shape_name: str, mesh, *, act_mode: str = "auto",
     inputs_spec = shard_lib.batch_specs(inputs_abs, cfg, mesh)
     caches_abs = jax.eval_shape(lambda: model_lib.init_caches(cfg, plan.batch, cache_spec))
     caches_spec = shard_lib.cache_specs(caches_abs, cfg, mesh, synapse_token_shard=synapse_token_shard)
-    fn = lambda p, i, c: model_lib.decode_step(p, cfg, i, c, spec=cache_spec)
+    fn = _scoped(lambda p, i, c: model_lib.decode_step(p, cfg, i, c, spec=cache_spec))
     out_spec = (
         shard_lib.fit_spec(mesh, (plan.batch, cfg.vocab_size), [dp, None]),
         shard_lib.fit_spec(mesh, (plan.batch, cfg.d_model), [dp, None]),
@@ -293,6 +302,80 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str | None)
     return rec
 
 
+def run_lane(n_side: int, *, n_devices: int = 8, sync_every: int = 8,
+             out_dir: str | None = None) -> dict:
+    """Abstract lower + compile of the LANE-SHARDED macro tick (ISSUE 6).
+
+    Builds the exact TickState the engine would hold at ``max_side=n_side``
+    via ``jax.eval_shape`` (no buffers materialize — this is how the
+    1024-lane shape dry-runs on the container), wraps the fused window in
+    ``shard_map`` over a lane mesh, and records memory/collective analysis.
+    """
+    from repro.core import engine as engine_lib
+    from repro.launch.mesh import make_lane_mesh
+    from repro.serving.sampler import SamplingParams
+
+    cfg = get_config("qwen2.5-0.5b", reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    jcfg = dataclasses.replace(cfg, scan_layers=cfg.scan_layers and cfg.n_layers > 8)
+    mesh = make_lane_mesh(n_devices)
+    main_spec = model_lib.CacheSpec(kind="full", capacity=128)
+    side_spec = model_lib.CacheSpec(kind="synapse", n_landmarks=64, window=64, n_inject=16)
+    side_spec = dataclasses.replace(
+        side_spec,
+        policy=dataclasses.replace(side_spec.policy, attend_impl="piece"),
+    )
+    greedy = SamplingParams(greedy=True)
+    state_abs = jax.eval_shape(
+        lambda: engine_lib.init_tick_state(
+            cfg, n_main=1, max_side=n_side, main_spec=main_spec,
+            side_spec=side_spec, ring_capacity=sync_every, side_prompt_cap=64,
+            main_sampling=greedy, side_sampling=greedy,
+        )
+    )
+    params_abs = model_lib.abstract_params(cfg)
+    specs = shard_lib.tick_state_specs(state_abs, mesh)
+    fn = synapse_sharded.shard_map_nocheck(
+        functools.partial(
+            engine_lib.fused_tick, cfg=jcfg, main_spec=main_spec,
+            side_spec=side_spec, step_sides=True, use_filters=False,
+            any_greedy=True, n_ticks=sync_every,
+        ),
+        mesh, in_specs=(P(), specs), out_specs=specs,
+    )
+    rec: dict = {"kind": "lane_macro_tick", "n_side": n_side,
+                 "lane_mesh_shape": list(mesh.devices.shape),
+                 "sync_every": sync_every}
+    t0 = time.time()
+    try:
+        jitted = jax.jit(fn, donate_argnums=(1,))
+        lowered = jitted.lower(params_abs, state_abs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        rec.update(
+            status="OK", lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=_mem_dict(mem), collectives=parse_collectives(hlo),
+            hlo_bytes=len(hlo),
+        )
+        print(
+            f"[dryrun] lane macro tick n_side={n_side} on {n_devices}-device "
+            f"lane mesh: OK (lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+            f"argbytes/dev {rec['memory'].get('argument_size_in_bytes', 0)/1e9:.2f}GB)"
+        )
+    except Exception as e:
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] lane macro tick n_side={n_side}: FAIL {type(e).__name__}: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"lane__s{n_side}__d{n_devices}.json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
 def _mem_dict(mem) -> dict:
     out = {}
     for attr in (
@@ -318,7 +401,17 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--lane", type=int, default=None, metavar="N_SIDE",
+                    help="lower+compile the lane-sharded macro tick at N_SIDE "
+                         "side lanes on an 8-device lane mesh (ISSUE 6 scale "
+                         "dry-run; e.g. --lane 1024)")
     args = ap.parse_args()
+
+    if args.lane is not None:
+        rec = run_lane(args.lane, out_dir=args.out)
+        if rec["status"] != "OK":
+            raise SystemExit(1)
+        return
 
     combos = []
     archs = list_archs() if (args.all or args.arch is None) else [args.arch]

@@ -25,6 +25,26 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+LANE_AXIS = "lane"
+
+
+def make_lane_mesh(n_lanes: int | None = None, *, devices=None):
+    """1-D ``lane`` mesh for the lane-sharded cortex engine: side-agent
+    lanes are split over this axis, main-stream state replicates. Defaults
+    to every visible device (force more on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs) if n_lanes is None else n_lanes
+    if n > len(devs):
+        raise ValueError(f"make_lane_mesh: {n} lanes > {len(devs)} devices")
+    return jax.make_mesh((n,), (LANE_AXIS,), devices=devs[:n])
+
+
+def lane_axis(mesh) -> str | None:
+    """The lane axis name when ``mesh`` carries one, else None."""
+    return LANE_AXIS if mesh is not None and LANE_AXIS in mesh.axis_names else None
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

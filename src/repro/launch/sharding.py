@@ -141,6 +141,62 @@ def shardings_for(tree_of_specs, mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# lane-sharded engine state (ISSUE 6: the cortex macro tick under shard_map)
+# ---------------------------------------------------------------------------
+LANE_AXIS = "lane"
+
+
+def tick_state_specs(state, mesh: Mesh, *, axis: str = LANE_AXIS):
+    """PartitionSpec tree for the engine's :class:`TickState` on a lane mesh.
+
+    Placement rule (the whole refactor in one function): every ``side_*``
+    leaf shards its LANE dim over ``axis`` — dim 1 for the stacked
+    ``side_caches`` ([L, S, ...]), dim 0 for everything else ([S] budgets,
+    [S, R] token rings, [S, P] prompt buffers, [S, d] hidden, the
+    LaneSampling arrays) — while main-stream state, the PRNG key, and the
+    ring cursor replicate (every device runs the river redundantly; the
+    paper's one-river/many-streams topology makes the river the cheap
+    part). A lane count the axis does not divide replicates that leaf
+    instead of producing an invalid sharding (same ``_fit`` contract as
+    the param rules).
+    """
+    size = mesh.shape[axis]
+
+    def one(path, leaf):
+        names = _path_names(path)
+        field = names[0] if names else ""
+        if not field.startswith("side_"):
+            return P()
+        lane_dim = 1 if field == "side_caches" else 0
+        ndim = getattr(leaf, "ndim", 0)
+        shape = getattr(leaf, "shape", ())
+        axes = [None] * ndim
+        if ndim > lane_dim and shape[lane_dim] % size == 0:
+            axes[lane_dim] = axis
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def lane_cache_specs(caches, mesh: Mesh, *, axis: str = LANE_AXIS):
+    """Stacked [L, B, ...] cache tree with the BATCH dim (dim 1) sharded
+    over the lane axis — the BatchServer's lane placement (one KV lane per
+    request, lanes spread across the mesh). Non-divisible lane counts
+    replicate, like everywhere else."""
+    size = mesh.shape[axis]
+
+    def one(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        shape = getattr(leaf, "shape", ())
+        axes = [None] * ndim
+        if ndim > 1 and shape[1] % size == 0:
+            axes[1] = axis
+        return P(*axes)
+
+    return jax.tree.map(one, caches)
+
+
+# ---------------------------------------------------------------------------
 # batch / cache specs
 # ---------------------------------------------------------------------------
 def batch_specs(batch_abstract, cfg: ModelConfig, mesh: Mesh):

@@ -60,12 +60,28 @@ class BatchServer:
         sampling: SamplingParams = SamplingParams(temperature=0.8),
         cache_kind: str = "full",
         seed: int = 0,
+        mesh=None,
     ):
+        """``mesh``: a lane mesh (``launch.mesh.make_lane_mesh``) spreads
+        the per-request KV lanes over its ``lane`` axis — the plain-serving
+        counterpart of the engine's lane-sharded TickState. Weights
+        replicate; the batched decode partitions over lanes via GSPMD."""
         self.params, self.cfg, self.tok = params, cfg, tokenizer
         self.sampling = sampling
         self.spec = model_lib.CacheSpec(kind=cache_kind, capacity=capacity)
         self.caches = model_lib.init_caches(cfg, n_lanes, self.spec)
         self.n_lanes = n_lanes
+        self.mesh = mesh
+        cache_sh = None
+        if mesh is not None and "lane" in getattr(mesh, "axis_names", ()):
+            from repro.launch import sharding as shard_rules
+
+            cache_sh = shard_rules.shardings_for(
+                shard_rules.lane_cache_specs(self.caches, mesh), mesh
+            )
+            rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            self.caches = jax.device_put(self.caches, cache_sh)
+            self.params = jax.device_put(self.params, rep)
         self.lanes: list[Request | None] = [None] * n_lanes
         self.positions = np.zeros(n_lanes, np.int64)
         self.queue: list[Request] = []
@@ -81,10 +97,16 @@ class BatchServer:
         self._jit_prefill = jax.jit(
             lambda p, toks, c: model_lib.prefill(p, cfg, {"tokens": toks}, c, spec=self.spec)
         )
+        # pin the decode's cache output to the lane placement: GSPMD would
+        # otherwise be free to reshard the caches every step
+        decode_kw = {}
+        if cache_sh is not None:
+            decode_kw["out_shardings"] = (rep, rep, cache_sh)
         self._jit_decode = jax.jit(
             lambda p, toks, pos, c: model_lib.decode_step(
                 p, cfg, {"tokens": toks, "positions": pos}, c, spec=self.spec
-            )
+            ),
+            **decode_kw,
         )
 
     def submit(self, prompt: str, max_new_tokens: int = 64,

@@ -1,0 +1,260 @@
+"""Lane-sharded macro ticks (ISSUE 6 acceptance criteria).
+
+The contract this suite pins down, on a forced-multi-device CPU mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the multi-device
+tests self-skip without it; the mesh-of-1 test always runs):
+
+* PARITY — greedy token streams from the lane-sharded engine (side state
+  split over the ``lane`` mesh axis, macro window under ``shard_map``) are
+  BITWISE identical to the single-device engine across spawn/merge
+  interleavings: main and side tokens, event history, merge verdicts;
+* DISPATCH COUNT — ``run(n)`` still issues exactly ``ceil(n/sync_every)``
+  fused dispatches under the mesh;
+* ZERO HOST SYNCS — the sharded window runs under
+  ``jax.transfer_guard("disallow")``: all state is committed to the mesh up
+  front, nothing implicit crosses the host boundary;
+* DONATION — the sharded donated dispatch shows no peak-cache doubling:
+  cache totals equal the single-device engine (the replicated serving-weight
+  copy is reported separately) and stay bit-stable over more windows;
+* PLACEMENT — side leaves really are lane-sharded (local shard = S/n_dev),
+  main leaves really are replicated.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import hypothesis_tools
+from repro.configs import get_config
+from repro.core.engine import CortexEngine
+from repro.core.prism import Prism
+from repro.data.tokenizer import ByteTokenizer
+from repro.launch.mesh import make_lane_mesh
+from repro.models import model as model_lib
+from repro.serving.sampler import SamplingParams
+
+N_DEV = jax.device_count()
+needs_mesh = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_config("qwen2.5-0.5b", reduced=True), compute_dtype="float32"
+    )
+
+
+def _engine(cfg, params, mesh, *, sync_every=4, max_side=8, theta=-1.0,
+            side_max_steps=6, sampling=SamplingParams(greedy=True)):
+    return CortexEngine(
+        Prism(params, cfg), ByteTokenizer(cfg.vocab_size), n_main=1,
+        max_side=max_side, main_capacity=128, side_max_steps=side_max_steps,
+        inject_tokens=8, theta=theta, sampling=sampling,
+        sync_every=sync_every, mesh=mesh,
+    )
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def pair(setup):
+    """The same spawn/merge workload on an 8-device lane mesh and on the
+    default single device (theta=-1 accepts merges, so side thoughts mutate
+    the replicated main cache mid-run — parity must survive the full
+    control plane crossing the shard boundary)."""
+    cfg, params = setup
+    lane = _engine(cfg, params, make_lane_mesh(8))
+    ref = _engine(cfg, params, None)
+    prompt = "hello [TASK: go] world"
+    lane.submit(prompt, lane=0)
+    ref.submit(prompt, lane=0)
+    base = dict(lane.stats)
+    lane.run(24)
+    ref.run(24)
+    return lane, ref, base
+
+
+@needs_mesh
+def test_lane_sharded_matches_single_device_bitwise(pair):
+    lane, ref, _ = pair
+    assert lane.mains[0].tokens == ref.mains[0].tokens
+    for sl, sr in zip(lane.sides, ref.sides):
+        assert sl.tokens == sr.tokens
+    assert [(e["event"], e.get("accepted")) for e in lane.history] == \
+           [(e["event"], e.get("accepted")) for e in ref.history]
+    assert any(e["event"] == "merge" for e in lane.history)
+
+
+@needs_mesh
+def test_lane_dispatch_count_is_ceil(pair, setup):
+    lane, _, base = pair
+    assert lane.stats["tick_dispatches"] - base["tick_dispatches"] == 24 // 4
+    # partial trailing windows on a fresh sharded engine
+    cfg, params = setup
+    eng = _engine(cfg, params, make_lane_mesh(8), theta=2.0)
+    eng.submit("ceil probe", lane=0)
+    for n in (8, 7, 3, 1):
+        b = eng.stats["tick_dispatches"]
+        eng.run(n)
+        assert eng.stats["tick_dispatches"] - b == math.ceil(n / 4), n
+
+
+@needs_mesh
+def test_zero_host_syncs_inside_sharded_window(setup):
+    """Everything the macro dispatch reads was committed to the mesh at
+    admission/drain time, so the whole sharded window runs with transfers
+    hard-disallowed — the invariant that makes lane scaling free of
+    per-tick host chatter."""
+    cfg, params = setup
+    eng = _engine(cfg, params, make_lane_mesh(8), theta=2.0)
+    m = eng.submit("transfer guard probe [TASK: think] x", lane=0)
+    eng.run(8)  # warm both scan variants + drain to a boundary
+    base = dict(eng.stats)
+    n_tok = len(m.tokens)
+    with jax.transfer_guard("disallow"):
+        eng._dispatch_window(eng.sync_every)
+    assert eng.stats["tick_dispatches"] - base["tick_dispatches"] == 1
+    assert eng.stats["host_syncs"] == base["host_syncs"]
+    eng.drain()
+    assert eng.stats["host_syncs"] == base["host_syncs"] + 1
+    assert len(m.tokens) == n_tok + eng.sync_every
+
+
+@needs_mesh
+def test_sharded_donation_no_peak_doubling(pair):
+    """The sharded dispatch donates the TickState exactly like the
+    single-device one: per-agent cache bytes match the reference engine
+    (the lane engine additionally reports its replicated serving-weight
+    copy — a real resident buffer on the mesh, counted separately), and
+    more windows leave the footprint bit-stable."""
+    lane, ref, _ = pair
+    rl, rr = lane.memory_report(), ref.memory_report()
+    assert rl["n_agents"] == rr["n_agents"]
+    cache_l = rl["total_bytes"] - rl["serving_weight_bytes"]
+    cache_r = rr["total_bytes"] - rr["serving_weight_bytes"]
+    assert cache_l == cache_r
+    lane.run(8)
+    assert lane.memory_report()["total_bytes"] == rl["total_bytes"]
+
+
+@needs_mesh
+def test_side_state_is_lane_sharded(pair):
+    """Placement, not just parity: each device holds S/n_dev side lanes
+    (caches shard dim 1 — dim 0 is the stacked layer axis), while the main
+    stream and the PRNG key are fully replicated."""
+    lane, _, _ = pair
+    S = lane.max_side
+    n = 8
+    tok_shard = lane.state.side_tok.addressable_shards[0].data
+    assert tok_shard.shape == (S // n,)
+    cache_leaf = jax.tree.leaves(lane.state.side_caches)[0]
+    shard = cache_leaf.addressable_shards[0].data
+    assert shard.shape[1] == cache_leaf.shape[1] // n
+    assert lane.state.main_tok.sharding.is_fully_replicated
+    assert lane.state.key.sharding.is_fully_replicated
+
+
+@needs_mesh
+def test_max_side_must_divide_lane_axis(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="multiple of the lane-axis"):
+        _engine(cfg, params, make_lane_mesh(8), max_side=6)
+
+
+def test_mesh_of_one_matches_plain_engine(setup):
+    """A 1-device lane mesh exercises the whole sharded code path —
+    shard_map wrap, spec trees, out_shardings, committed cursor resets —
+    on any machine, and must be bitwise identical to the plain engine.
+    (Tier-1 coverage for the lane path without forced devices.)"""
+    cfg, params = setup
+    lane = _engine(cfg, params, make_lane_mesh(1), max_side=2)
+    ref = _engine(cfg, params, None, max_side=2)
+    prompt = "mesh of one [TASK: go] probe"
+    lane.submit(prompt, lane=0)
+    ref.submit(prompt, lane=0)
+    lane.run(12)
+    ref.run(12)
+    assert lane.mains[0].tokens == ref.mains[0].tokens
+    for sl, sr in zip(lane.sides, ref.sides):
+        assert sl.tokens == sr.tokens
+
+
+@needs_mesh
+def test_batch_server_lane_placement(setup):
+    """The plain-serving baseline under the same mesh: per-request KV lanes
+    spread over the lane axis, greedy outputs bitwise identical to the
+    unsharded server."""
+    from repro.serving.server import BatchServer
+
+    cfg, params = setup
+    tok = ByteTokenizer(cfg.vocab_size)
+
+    def serve(mesh):
+        srv = BatchServer(params, cfg, tok, n_lanes=8, capacity=128,
+                          sampling=SamplingParams(greedy=True), seed=0, mesh=mesh)
+        for i in range(6):
+            srv.submit(f"request {i}", max_new_tokens=12)
+        done = srv.run_until_done()
+        return sorted((r.rid, tuple(r.tokens)) for r in done)
+
+    assert serve(make_lane_mesh(8)) == serve(None)
+
+
+# ---------------------------------------------------------------------------
+# property-based parity (hypothesis optional — gated via conftest)
+# ---------------------------------------------------------------------------
+given, settings, st = hypothesis_tools()
+
+_PROP = {}  # (sync_every, kind) -> engine, reused across examples
+
+
+def _prop_engine(setup, sync_every, kind):
+    cfg, params = setup
+    key = (sync_every, kind)
+    if key not in _PROP:
+        mesh = make_lane_mesh(8) if kind == "lane" else None
+        _PROP[key] = _engine(cfg, params, mesh, sync_every=sync_every,
+                             max_side=8, side_max_steps=4)
+    eng = _PROP[key]
+    for s in eng.sides:  # clear streams left over from the previous example
+        if s.active:
+            eng.retire_side(s.lane)
+    return eng
+
+
+@needs_mesh
+@settings(max_examples=4, deadline=None)
+@given(
+    prompt=st.text(alphabet="abcdef ", min_size=1, max_size=12),
+    with_task=st.booleans(),
+    sync_every=st.sampled_from([2, 4]),
+    n_windows=st.integers(min_value=1, max_value=2),
+    extra=st.integers(min_value=0, max_value=1),
+)
+def test_property_lane_sharded_equals_single_device(setup, prompt, with_task,
+                                                    sync_every, n_windows, extra):
+    """Random prompts, window sizes, and spawn/merge interleavings: the
+    lane-sharded engine equals the single-device engine token-for-token on
+    greedy lanes (main AND side), including partial trailing windows."""
+    text = prompt + (" [TASK: check] tail" if with_task else "")
+    n = n_windows * sync_every + extra
+    lane = _prop_engine(setup, sync_every, "lane")
+    ref = _prop_engine(setup, sync_every, "ref")
+    ml = lane.submit(text, lane=0)
+    mr = ref.submit(text, lane=0)
+    base = lane.stats["tick_dispatches"]
+    lane.run(n)
+    ref.run(n)
+    assert ml.tokens == mr.tokens
+    for sl, sr in zip(lane.sides, ref.sides):
+        assert sl.tokens == sr.tokens
+    assert lane.stats["tick_dispatches"] - base == math.ceil(n / sync_every)
