@@ -82,6 +82,25 @@ def smoke() -> dict:
     return out
 
 
+def hibernate_smoke() -> dict:
+    """CI gate for the tiered synapse memory (ISSUE 7): a dormant agent
+    must cost exactly ZERO device bytes (`assert_dormant_zero` inside the
+    bench), the registry split must add up, and the async wake must land a
+    token. Sized small; the recorded baseline uses registered=256."""
+    from benchmarks import bench_hibernate
+
+    out = bench_hibernate.run(registered=16, active=4, sync_every=4,
+                              wake_reps=2, ticks_every=8)
+    assert out["agents"]["dormant"] == out["registered"] - out["active"]
+    assert out["wake_to_first_token_s"] > 0
+    assert out["wakes"] >= 2 and out["hibernates"] >= out["registered"] - out["active"]
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    with open("benchmarks/artifacts/bench_hibernate_smoke.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print("smoke,ok,dormant agents hold zero device bytes; async wake verified")
+    return out
+
+
 def main() -> None:
     from benchmarks import bench_kernels, bench_synapse_quality, bench_table1, bench_table2, bench_throughput
 
@@ -114,6 +133,12 @@ def main() -> None:
             throughput["lane_scale"] = lane["per_n_side"]
         except Exception as e:
             print(f"lane_scale,0,FAILED:{type(e).__name__}:{e}")
+        try:
+            from benchmarks import bench_hibernate
+
+            throughput["hibernate"] = bench_hibernate.run()
+        except Exception as e:
+            print(f"hibernate,0,FAILED:{type(e).__name__}:{e}")
         with open(os.path.join(ROOT, "BENCH_throughput.json"), "w") as f:
             json.dump(throughput, f, indent=1, default=str)
 
@@ -128,6 +153,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.smoke:
         smoke()
+        hibernate_smoke()
         if args.lane:
             lane_smoke()
     else:

@@ -3,6 +3,14 @@
 Arrays are stored as (dtype, shape, raw bytes); the tree structure is
 round-tripped via flatten-with-path so arbitrary nested dict/list/dataclass
 param trees survive.
+
+Two layers:
+
+* :func:`dumps` / :func:`loads` — in-memory codec (bytes <-> pytree). The
+  tiered synapse memory's cold tier stores these blobs on disk, one per
+  hibernated agent, with only a shape/dtype skeleton kept in host RAM.
+* :func:`save` / :func:`load` — file wrappers over the same codec (atomic
+  rename on save).
 """
 from __future__ import annotations
 
@@ -15,7 +23,7 @@ import numpy as np
 
 try:
     import zstandard
-except ImportError:  # optional dep: only save/load need it
+except ImportError:  # optional dep: only the codec entry points need it
     zstandard = None
 
 
@@ -42,10 +50,44 @@ def _encode_tree(tree) -> bytes:
     return msgpack.packb(payload, use_bin_type=True)
 
 
-def save(path: str, tree, *, level: int = 3) -> None:
+def _decode_tree(raw: bytes, like, *, numpy: bool = False):
+    """Rebuild the pytree of `like` from an encoded payload.
+
+    ``like`` supplies structure only — its leaves may be real arrays or
+    abstract ``jax.ShapeDtypeStruct``s (the cold tier keeps just the
+    skeleton in RAM). ``numpy=True`` returns numpy leaves (no device
+    transfer) — the warm-tier restore path.
+    """
+    payload = msgpack.unpackb(raw, raw=False)
+    by_path = {p["path"]: p for p in payload}
+    leaves_with_paths, tdef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, _ in leaves_with_paths:
+        key = jax.tree_util.keystr(path)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        rec = by_path[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        out.append(arr if numpy else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def dumps(tree, *, level: int = 3) -> bytes:
+    """Serialize a pytree to a compressed blob (msgpack + zstd)."""
     _require_zstd()
-    raw = _encode_tree(tree)
-    comp = zstandard.ZstdCompressor(level=level).compress(raw)
+    return zstandard.ZstdCompressor(level=level).compress(_encode_tree(tree))
+
+
+def loads(data: bytes, like, *, numpy: bool = False):
+    """Restore a pytree from a :func:`dumps` blob into the structure of
+    `like` (arrays or ShapeDtypeStructs). Raises KeyError on missing leaves."""
+    _require_zstd()
+    raw = zstandard.ZstdDecompressor().decompress(data)
+    return _decode_tree(raw, like, numpy=numpy)
+
+
+def save(path: str, tree, *, level: int = 3) -> None:
+    comp = dumps(tree, level=level)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -53,20 +95,9 @@ def save(path: str, tree, *, level: int = 3) -> None:
     os.replace(tmp, path)
 
 
-def load(path: str, like):
+def load(path: str, like, *, numpy: bool = False):
     """Restore into the structure of `like` (a pytree with array leaves)."""
     _require_zstd()
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
-    payload = msgpack.unpackb(raw, raw=False)
-    by_path = {p["path"]: p for p in payload}
-    leaves_with_paths, tdef = jax.tree_util.tree_flatten_with_path(like)
-    out = []
-    for path, leaf in leaves_with_paths:
-        key = jax.tree_util.keystr(path)
-        if key not in by_path:
-            raise KeyError(f"checkpoint missing leaf {key}")
-        rec = by_path[key]
-        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
-        out.append(jnp.asarray(arr))
-    return jax.tree_util.tree_unflatten(tdef, out)
+        data = f.read()
+    return loads(data, like, numpy=numpy)

@@ -83,6 +83,8 @@ from repro.core.prism import Prism, tree_bytes
 from repro.core.router import CortexRouter
 from repro.data.tokenizer import ByteTokenizer
 from repro.kernels.ops import ring_append
+from repro.launch.sharding import lane_gather, lane_scatter
+from repro.memory import ACTIVE, HIBERNATED, REGISTERED, AgentRegistry, SynapseStore
 from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
@@ -354,11 +356,13 @@ def _admit_main_fields(tok_a, pos_a, act_a, hid_a, samp_a, lane, tok, pos, hidde
     )
 
 
-def _admit_side_fields(prompt_a, plen_a, step_a, tok_a, pos_a, act_a, samp_a, lane, prompt, plen, last_tok, pos, temp, tk, tp):
+def _admit_side_fields(prompt_a, plen_a, step_a, tok_a, pos_a, act_a, samp_a, lane, prompt, plen, step, last_tok, pos, temp, tk, tp):
+    # ``step`` is 0 on a fresh spawn; a wake passes the hibernated snapshot's
+    # step so the teacher-forcing cursor resumes exactly where it stopped
     return (
         prompt_a.at[lane].set(prompt),
         plen_a.at[lane].set(plen),
-        step_a.at[lane].set(0),
+        step_a.at[lane].set(step),
         tok_a.at[lane].set(last_tok),
         pos_a.at[lane].set(pos),
         act_a.at[lane].set(True),
@@ -387,6 +391,33 @@ def _spawn_lane(cfg: ModelConfig, side_spec, main_caches, side_caches, parent_la
         side_caches,
         comp,
     )
+
+
+# ---------------------------------------------------------------------------
+# hibernation snapshots (ISSUE 7): one lane's device state, gathered into a
+# replicated dict pytree the SynapseStore can park on the host. Greedy decode
+# depends only on a lane's own cache/token/position, so restoring these exact
+# bytes into ANY free lane reproduces the agent's token stream bitwise.
+# ---------------------------------------------------------------------------
+def _gather_main_lane(state: TickState, lane):
+    return {
+        "caches": lane_gather(state.main_caches, lane, axis=1),
+        "tok": state.main_tok[lane],
+        "pos": state.main_pos[lane],
+        "hidden": state.main_hidden[lane],
+    }
+
+
+def _gather_side_lane(state: TickState, lane):
+    return {
+        "caches": lane_gather(state.side_caches, lane, axis=1),
+        "tok": state.side_tok[lane],
+        "pos": state.side_pos[lane],
+        "step": state.side_step[lane],
+        "plen": state.side_plen[lane],
+        "prompt": state.side_prompt[lane],
+        "hidden": state.side_hidden[lane],
+    }
 
 
 # byte values the conservative drain gate inspects on the raw token rings
@@ -473,6 +504,8 @@ class CortexEngine:
         side_prompt_cap: int = 64,
         compute_dtype: str | None = None,
         mesh=None,
+        store: SynapseStore | None = None,
+        hibernate_idle_ticks: int | None = None,
     ):
         """``mesh``: a lane mesh (see ``launch.mesh.make_lane_mesh``) shards
         every side-lane TickState leaf over its ``lane`` axis and runs the
@@ -551,6 +584,20 @@ class CortexEngine:
         self.n_main, self.max_side = n_main, max_side
         self.mains = [AgentView(f"main{i}", i, "main") for i in range(n_main)]
         self.sides = [AgentView(f"side{i}", i, "side") for i in range(max_side)]
+        # tiered memory (ISSUE 7): agents outlive lane slots — hibernated
+        # contexts park in the store (warm host RAM / cold zstd disk), the
+        # registry owns identity + LRU bookkeeping, and wakes land via the
+        # async prefetch tickets committed at window boundaries in run()
+        self.store = store if store is not None else SynapseStore()
+        self.registry = AgentRegistry()
+        self.hibernate_idle_ticks = hibernate_idle_ticks
+        self._agent_seq = 0
+        self._wake_tickets: dict[str, object] = {}
+        self._pending_wakes: list[str] = []
+        # (kind, lane) pairs woken between a ring fetch and that window's
+        # post-processing: they were NOT on device for the fetched window,
+        # so the mirror advancement in _postprocess must skip them
+        self._fresh_wakes: set[tuple[str, int]] = set()
         # host mirrors of the per-lane device sampling arrays: they pick the
         # STATIC sampler fast path (skip the sort when no live lane filters,
         # skip the argmax select when none is greedy) without device reads
@@ -564,6 +611,8 @@ class CortexEngine:
             # overlapped the next window's device execution, and a histogram
             # of dispatched window lengths (window_hist[w] = count)
             "overlapped_drains": 0, "window_hist": {},
+            # tiered-memory telemetry
+            "hibernates": 0, "wakes": 0,
         }
         self._pending = 0  # ticks since last drain (== device ring cursor)
 
@@ -654,6 +703,28 @@ class CortexEngine:
             lambda act_a, lane: act_a.at[lane].set(False), (0,),
             ssh.side_active if ssh else None,
         )
+        self._jit_retire_main = _jit(
+            lambda act_a, lane: act_a.at[lane].set(False), (0,),
+            ssh.main_active if ssh else None,
+        )
+        # hibernate/wake lane transfer jits. Gathers replicate their outputs
+        # (on a mesh GSPMD inserts the collective pulling a sharded side
+        # lane's leaves together); scatters donate the full cache tree and
+        # pin its lane sharding so the next macro dispatch aliases cleanly.
+        self._jit_gather_main = _jit(_gather_main_lane, (), rep if ssh else None)
+        self._jit_gather_side = _jit(_gather_side_lane, (), rep if ssh else None)
+        self._jit_wake_main_caches = _jit(
+            lambda c, part, lane: lane_scatter(c, part, lane, axis=1), (0,),
+            ssh.main_caches if ssh else None,
+        )
+        self._jit_wake_side_caches = _jit(
+            lambda c, part, lane: lane_scatter(c, part, lane, axis=1), (0,),
+            ssh.side_caches if ssh else None,
+        )
+        self._jit_set_side_hidden = _jit(
+            lambda hid_a, lane, h: hid_a.at[lane].set(h.astype(hid_a.dtype)), (0,),
+            ssh.side_hidden if ssh else None,
+        )
 
     def _macro_fn(self, n_ticks: int, step_sides: bool, use_filters: bool, any_greedy: bool):
         """Jitted fused_tick variant for an ``n_ticks``-long window.
@@ -719,15 +790,20 @@ class CortexEngine:
         return self.state.side_hidden
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: str, lane: int = 0, sampling: SamplingParams | None = None):
+    def submit(self, prompt: str, lane: int = 0, sampling: SamplingParams | None = None,
+               agent_id: str | None = None):
         """Start (or restart) a main agent on `lane` with `prompt`.
 
         Prefills directly into the batched cache at `lane` (one dispatch,
         donated caches — no gather/scatter round-trip of the full tree).
         ``sampling`` overrides the engine default for THIS lane only (e.g. a
-        greedy river among exploratory lanes); restarting a lane resets it."""
+        greedy river among exploratory lanes); restarting a lane resets it.
+        ``agent_id`` names the agent in the registry (it can later
+        :meth:`hibernate` and :meth:`wake` into a different lane); omitted,
+        the classic per-lane identity ``main{lane}`` is used when free."""
         self.drain()  # align host mirrors to a window boundary
         self.window.on_event()  # admission: back to the base window
+        aid = self._claim_main_identity(lane, agent_id)
         ids = self.tok.encode(prompt, bos=True)
         toks = jnp.asarray([ids], jnp.int32)
         logits, hidden, new_caches = self._jit_prefill_lane(
@@ -745,16 +821,75 @@ class CortexEngine:
             main_active=act_a, main_hidden=hid_a, main_samp=samp_a,
         )
         self.stats["aux_dispatches"] += 2
-        m = self.mains[lane]
+        m = AgentView(aid, lane, "main")
+        self.mains[lane] = m
         m.text, m.tokens = prompt, list(ids)
         m.position, m.active, m.steps = len(ids), True, 0
         self.prism.acquire(m.agent_id)
+        rec = self.registry.bind(aid, lane)
+        rec.bound_tick = self.stats["ticks"]
         self.router.reset(m.agent_id)  # lane may be restarting
         # triggers already present in the prompt spawn immediately
         for tr in self.router.feed(m.agent_id, prompt):
             if tr.kind == "task":
                 self._spawn_side(m, tr.payload)
         return m
+
+    def _claim_main_identity(self, lane: int, agent_id: str | None) -> str:
+        """Resolve the agent_id a main-lane submit binds, evicting the lane's
+        previous occupant from the registry (its context is overwritten)."""
+        cur = self.mains[lane]
+        if cur.active:
+            # whoever held the lane loses its device context
+            self.prism.release(cur.agent_id)
+            self.registry.release(cur.agent_id)
+            self.router.reset(cur.agent_id)
+        if agent_id is None:
+            agent_id = f"main{lane}"
+            if agent_id in self.registry and (
+                self.registry.get(agent_id).status == HIBERNATED
+                or (self.registry.get(agent_id).status == ACTIVE
+                    and self.registry.get(agent_id).lane != lane)
+            ):
+                # the classic identity is alive elsewhere (parked or woken
+                # into another lane): mint a fresh one instead of clobbering
+                agent_id = f"main{lane}.{self._agent_seq}"
+                self._agent_seq += 1
+        else:
+            if agent_id in self.registry:
+                rec = self.registry.get(agent_id)
+                if rec.status == ACTIVE and rec.lane != lane:
+                    raise ValueError(
+                        f"agent {agent_id!r} is already active on lane {rec.lane}"
+                    )
+                if rec.status == HIBERNATED:
+                    # re-submitting replaces the parked context outright
+                    self.store.drop(agent_id)
+                    self._wake_tickets.pop(agent_id, None)
+                    if agent_id in self._pending_wakes:
+                        self._pending_wakes.remove(agent_id)
+        self.registry.register(agent_id, "main")
+        return agent_id
+
+    def submit_agent(self, prompt: str, agent_id: str | None = None,
+                     sampling: SamplingParams | None = None):
+        """Lane-less submit: place a (new or registered) agent on any free
+        main lane, hibernating the least-recently-touched resident if the
+        river lanes are full — "max lanes" becomes "max *active* agents"."""
+        lane = self._free_main_lane()
+        if lane < 0:
+            evicted = self._evict_lru_main()
+            if evicted is None:
+                raise RuntimeError(
+                    "no free main lane and no evictable resident "
+                    "(all mains have live side streams)"
+                )
+            lane = self._free_main_lane()
+            assert lane >= 0
+        if agent_id is None:
+            agent_id = f"agent{self._agent_seq}"
+            self._agent_seq += 1
+        return self.submit(prompt, lane=lane, sampling=sampling, agent_id=agent_id)
 
     # ------------------------------------------------------------------
     def _any_active(self) -> bool:
@@ -897,11 +1032,7 @@ class CortexEngine:
         remaining = n_ticks
         # close a partially-filled window (tick() interleavings) exactly
         # like the serial path before entering the pipeline at a boundary
-        while 0 < remaining and self._pending:
-            if not self._any_active():
-                self.stats["ticks"] += remaining
-                self.drain()
-                return
+        while 0 < remaining and self._pending and self._any_active():
             w = min(self.sync_every - self._pending, remaining)
             self._dispatch_window(w)
             remaining -= w
@@ -913,6 +1044,11 @@ class CortexEngine:
         inflight = 0  # virtual ticks of the window currently on the device
         while remaining or inflight:
             if not inflight:
+                # window boundary, nothing in flight: the tiered-memory
+                # control plane runs here (idle-tick demotions + ready wake
+                # commits; a fully idle engine blocks on its prefetch
+                # tickets so a wake-only run still makes progress)
+                self._boundary_ops(wait=not self._any_active())
                 if not self._any_active():
                     self.stats["ticks"] += remaining
                     return
@@ -923,6 +1059,11 @@ class CortexEngine:
                 continue
             rings, nwin = self._fetch_rings(), inflight
             inflight = 0
+            # ready wakes commit between the ring fetch and the next
+            # dispatch: the prefetched buffers are already on device, so the
+            # scatter joins window t+1 without flushing the pipeline. (No
+            # demotions here — window t's host mirrors are still stale.)
+            self._commit_ready_wakes(mark_fresh=True)
             if remaining and self._any_active() and self._gate(rings, nwin):
                 # overlap: the device starts window t+1 while the host does
                 # window t's decoding/router work (guaranteed control-free);
@@ -936,12 +1077,15 @@ class CortexEngine:
                 self.stats["overlapped_drains"] += 1
             else:
                 self._postprocess(rings, nwin)
+        self._boundary_ops()
 
     def _run_serial(self, n_ticks: int):
         """The PR 4 lockstep loop: dispatch → drain → dispatch, pinned
         ``sync_every`` windows. Kept as the bitwise parity reference."""
         remaining = n_ticks
         while remaining > 0:
+            if self._pending == 0:
+                self._boundary_ops(wait=not self._any_active())
             if not self._any_active():
                 self.stats["ticks"] += remaining
                 break
@@ -955,6 +1099,7 @@ class CortexEngine:
             if self._pending >= self.sync_every:
                 self.drain()
         self.drain()
+        self._boundary_ops()
 
     # ------------------------------------------------------------------
     def drain(self):
@@ -1006,6 +1151,8 @@ class CortexEngine:
         for m in self.mains:
             if not m.active:
                 continue
+            if ("main", m.lane) in self._fresh_wakes:
+                continue  # woke after this window ran: not on device for it
             toks = [int(t) for t in main_ring[m.lane, :n] if t >= 0]
             chunk = self.tok.decode(toks)
             m.tokens.extend(toks)
@@ -1019,6 +1166,8 @@ class CortexEngine:
         for s in self.sides:
             if not s.active:
                 continue
+            if ("side", s.lane) in self._fresh_wakes:
+                continue  # woke after this window ran: not on device for it
             s.steps += n
             s.position += n
             raw = [int(t) for t in side_ring[s.lane, :n] if t >= 0]
@@ -1066,6 +1215,7 @@ class CortexEngine:
             self.window.on_quiet_drain()
         else:
             self.window.on_event()
+        self._fresh_wakes.clear()  # next window has the woken lanes on device
 
     # ------------------------------------------------------------------
     def _free_side_lane(self) -> int:
@@ -1096,7 +1246,7 @@ class CortexEngine:
             self.state.side_prompt, self.state.side_plen, self.state.side_step,
             self.state.side_tok, self.state.side_pos, self.state.side_active,
             self.state.side_samp,
-            lane, jnp.asarray(padded, jnp.int32), len(ids), ids[-1], parent.position,
+            lane, jnp.asarray(padded, jnp.int32), len(ids), 0, ids[-1], parent.position,
             temp, tk, tp,
         )
         self.state = dataclasses.replace(
@@ -1106,6 +1256,12 @@ class CortexEngine:
         )
         self.stats["aux_dispatches"] += 2
         s = self.sides[lane]
+        if s.agent_id in self.registry and self.registry.get(s.agent_id).status != REGISTERED:
+            # the classic per-lane identity is still alive (hibernated, or
+            # woken into another lane): mint a fresh one for this spawn
+            s = AgentView(f"side{lane}.{self._agent_seq}", lane, "side")
+            self._agent_seq += 1
+            self.sides[lane] = s
         s.task, s.text = task, ""
         s.parent_lane = parent.lane
         s.tokens = list(ids)
@@ -1113,6 +1269,9 @@ class CortexEngine:
         s.active, s.steps = True, 0
         s.prompt_len = len(ids)
         self.prism.acquire(s.agent_id)
+        self.registry.register(s.agent_id, "side")
+        rec = self.registry.bind(s.agent_id, lane)
+        rec.bound_tick = self.stats["ticks"]
         self.history.append(
             {"event": "spawn", "agent": s.agent_id, "task": task, "task_truncated": truncated}
         )
@@ -1132,8 +1291,222 @@ class CortexEngine:
         self.stats["aux_dispatches"] += 1
         self.router.reset(s.agent_id)
         self.prism.release(s.agent_id)
+        self.registry.release(s.agent_id)
         s.active = False
         self.history.append({"event": "retire", "agent": s.agent_id})
+
+    # ------------------------------------------------------------------
+    # tiered memory (ISSUE 7): hibernate parks an agent's lane in the
+    # SynapseStore (device → warm host RAM → cold zstd disk); wake prefetches
+    # it back asynchronously and commits at a window boundary in run().
+    # ------------------------------------------------------------------
+    def _free_main_lane(self) -> int:
+        for m in self.mains:
+            if not m.active:
+                return m.lane
+        return -1
+
+    def _lanes_with_children(self) -> set[int]:
+        """Main lanes some side stream (live OR hibernated) will merge into.
+        Hibernating such a main would let another agent claim the lane and
+        receive the child's injection — identity corruption, so forbidden."""
+        lanes = {s.parent_lane for s in self.sides if s.active}
+        for rec in self.registry.with_status(HIBERNATED, "side"):
+            lanes.add(rec.saved["view"].parent_lane)
+        return lanes
+
+    def _evict_lru_main(self) -> str | None:
+        blocked = self._lanes_with_children()
+        cands = [
+            r for r in self.registry.with_status(ACTIVE, "main")
+            if r.lane not in blocked
+        ]
+        if not cands:
+            return None
+        rec = min(cands, key=lambda r: r.last_event)
+        self.hibernate(rec.agent_id)
+        return rec.agent_id
+
+    def hibernate(self, agent_id: str):
+        """Demote an agent's lane off the device: gather its cache slice +
+        per-lane scalars (ONE explicit host sync, at a drain boundary —
+        never mid-window), park them in the store's warm tier, and free the
+        lane. The router's retained tail for the agent survives on the host,
+        so a tag split across hibernation still matches after wake."""
+        rec = self.registry.get(agent_id)
+        if rec.status != ACTIVE:
+            raise ValueError(f"agent {agent_id!r} is not active (status={rec.status})")
+        lane, kind = rec.lane, rec.kind
+        view = (self.mains if kind == "main" else self.sides)[lane]
+        assert view.agent_id == agent_id
+        if kind == "main" and lane in self._lanes_with_children():
+            raise ValueError(
+                f"cannot hibernate {agent_id!r}: side streams still target "
+                f"main lane {lane} for their merge"
+            )
+        self.drain()  # boundary-align: no mid-window host syncs
+        self.window.on_event()
+        if kind == "main":
+            snap = self._jit_gather_main(self.state, lane)
+            act_a = self._jit_retire_main(self.state.main_active, lane)
+            self.state = dataclasses.replace(self.state, main_active=act_a)
+            sp = self._main_sp[lane]
+            self.mains[lane] = AgentView(f"main{lane}", lane, "main")
+        else:
+            snap = self._jit_gather_side(self.state, lane)
+            act_a = self._jit_retire_side(self.state.side_active, lane)
+            self.state = dataclasses.replace(self.state, side_active=act_a)
+            sp = self._side_sp[lane]
+            self.sides[lane] = AgentView(f"side{lane}", lane, "side")
+        self.store.put(agent_id, snap)  # device_get inside: the one sync
+        self.stats["aux_dispatches"] += 2
+        self.stats["host_syncs"] += 1
+        self.stats["hibernates"] += 1
+        view.active, view.lane = False, -1
+        self.registry.hibernate(agent_id, {"view": view, "sampling": sp})
+        self.prism.release(agent_id)
+        self.history.append({"event": "hibernate", "agent": agent_id, "kind": kind})
+
+    def wake(self, agent_id: str, *, wait: bool = False):
+        """Promote a hibernated agent back toward a lane. Returns
+        immediately after starting the async prefetch (a daemon thread pulls
+        warm/cold bytes and lands them on device); the wake *commits* — the
+        scatter into a free lane — at the next window boundary inside
+        :meth:`run`, overlapping the in-flight window instead of flushing
+        the pipeline. ``wait=True`` blocks until the agent is live."""
+        rec = self.registry.get(agent_id)
+        if rec.status == ACTIVE:
+            return (self.mains if rec.kind == "main" else self.sides)[rec.lane]
+        if rec.status != HIBERNATED:
+            raise ValueError(f"agent {agent_id!r} has no hibernated context")
+        if agent_id not in self._wake_tickets:
+            sharding = self._rep_sharding
+
+            def put_fn(host, _s=sharding):
+                # runs on the prefetch thread; transfer_guard is thread-local
+                # so these explicit copies never trip the engine's guard
+                return jax.device_put(host, _s) if _s is not None else jax.device_put(host)
+
+            self._wake_tickets[agent_id] = self.store.prefetch(agent_id, put_fn)
+            self._pending_wakes.append(agent_id)
+        if wait:
+            self.flush_wakes()
+            rec = self.registry.get(agent_id)
+            if rec.status != ACTIVE:
+                raise RuntimeError(f"wake of {agent_id!r} found no free lane")
+            return (self.mains if rec.kind == "main" else self.sides)[rec.lane]
+        return rec
+
+    def flush_wakes(self):
+        """Block until every pending wake has committed (or is lane-starved)."""
+        self.drain()
+        self._commit_ready_wakes(wait=True)
+
+    def _commit_ready_wakes(self, *, wait: bool = False, mark_fresh: bool = False) -> int:
+        """Land prefetched wakes whose device buffers are ready. Callers
+        guarantee a window boundary (ring cursor 0, no partial window): the
+        scatter dispatches here are boundary ops, outside any overlap
+        region, so the zero-transfer invariant of overlapped post-processing
+        is untouched."""
+        if not self._pending_wakes:
+            return 0
+        assert self._pending == 0, "wake commit must happen at a window boundary"
+        committed, still = 0, []
+        for aid in self._pending_wakes:
+            ticket = self._wake_tickets[aid]
+            if not (wait or ticket.ready()):
+                still.append(aid)
+                continue
+            if self._commit_wake(aid, ticket, mark_fresh=mark_fresh):
+                committed += 1
+            else:
+                still.append(aid)  # lane-starved: stays pending
+        self._pending_wakes = still
+        return committed
+
+    def _commit_wake(self, agent_id: str, ticket, *, mark_fresh: bool = False) -> bool:
+        rec = self.registry.get(agent_id)
+        kind = rec.kind
+        lane = self._free_main_lane() if kind == "main" else self._free_side_lane()
+        if lane < 0:
+            return False
+        part = ticket.result()  # device pytree (prefetch thread did the put)
+        del self._wake_tickets[agent_id]
+        saved = rec.saved
+        view, sp = saved["view"], saved["sampling"]
+        temp, tk, tp = lane_values(sp)
+        if kind == "main":
+            self._main_sp[lane] = sp
+            caches = self._jit_wake_main_caches(self.state.main_caches, part["caches"], lane)
+            tok_a, pos_a, act_a, hid_a, samp_a = self._jit_admit_main(
+                self.state.main_tok, self.state.main_pos, self.state.main_active,
+                self.state.main_hidden, self.state.main_samp,
+                lane, part["tok"], part["pos"], part["hidden"], temp, tk, tp,
+            )
+            self.state = dataclasses.replace(
+                self.state, main_caches=caches, main_tok=tok_a, main_pos=pos_a,
+                main_active=act_a, main_hidden=hid_a, main_samp=samp_a,
+            )
+            self.mains[lane] = view
+        else:
+            self._side_sp[lane] = sp
+            caches = self._jit_wake_side_caches(self.state.side_caches, part["caches"], lane)
+            prompt_a, plen_a, step_a, tok_a, pos_a, act_a, samp_a = self._jit_admit_side(
+                self.state.side_prompt, self.state.side_plen, self.state.side_step,
+                self.state.side_tok, self.state.side_pos, self.state.side_active,
+                self.state.side_samp,
+                lane, part["prompt"], part["plen"], part["step"], part["tok"],
+                part["pos"], temp, tk, tp,
+            )
+            hid_a = self._jit_set_side_hidden(self.state.side_hidden, lane, part["hidden"])
+            self.state = dataclasses.replace(
+                self.state, side_caches=caches, side_prompt=prompt_a,
+                side_plen=plen_a, side_step=step_a, side_tok=tok_a,
+                side_pos=pos_a, side_active=act_a, side_samp=samp_a,
+                side_hidden=hid_a,
+            )
+            self.sides[lane] = view
+        view.lane, view.active = lane, True
+        self.stats["aux_dispatches"] += 2 if kind == "main" else 3
+        self.stats["wakes"] += 1
+        self.prism.acquire(agent_id)
+        bound = self.registry.bind(agent_id, lane)
+        bound.bound_tick = self.stats["ticks"]
+        self.store.drop(agent_id)
+        self.window.on_event()
+        if mark_fresh:
+            # a fetched-but-unprocessed window exists: this lane was not on
+            # device for it, so its mirror advancement must be skipped once
+            self._fresh_wakes.add((kind, lane))
+        self.history.append({"event": "wake", "agent": agent_id, "lane": lane})
+        return True
+
+    def _auto_hibernate(self) -> int:
+        """Idle-ticks demotion policy: mains whose last control event
+        (submit/wake) is more than ``hibernate_idle_ticks`` virtual ticks
+        old spill to the warm tier. Runs only at fully-synced boundaries
+        (views current, nothing in flight)."""
+        if self.hibernate_idle_ticks is None:
+            return 0
+        blocked = self._lanes_with_children()
+        due = [
+            r for r in self.registry.with_status(ACTIVE, "main")
+            if self.stats["ticks"] - r.bound_tick >= self.hibernate_idle_ticks
+            and r.lane not in blocked
+        ]
+        for r in due:
+            self.hibernate(r.agent_id)
+        return len(due)
+
+    def _boundary_ops(self, *, wait: bool = False, hibernate_ok: bool = True) -> int:
+        """Window-boundary control plane: idle-ticks demotions, then wake
+        commits. ``wait=True`` blocks on outstanding prefetch tickets — used
+        when the engine is otherwise idle so a wake-only run makes progress."""
+        did = 0
+        if hibernate_ok:
+            did += self._auto_hibernate()
+        did += self._commit_ready_wakes(wait=wait and bool(self._pending_wakes))
+        return did
 
     # ------------------------------------------------------------------
     def _merge_side(self, s: AgentView, thought: str):
@@ -1164,6 +1537,7 @@ class CortexEngine:
         )
         self.router.reset(s.agent_id)
         self.prism.release(s.agent_id)
+        self.registry.release(s.agent_id)
         s.active = False
 
     # ------------------------------------------------------------------
@@ -1176,7 +1550,14 @@ class CortexEngine:
         for s in self.sides:
             if s.active:
                 per_agent[s.agent_id] = tree_bytes(_lane_slice(self.state.side_caches, s.lane))
-        rep = self.prism.memory_report(per_agent)
+        # hibernated agents are absent from per_agent by construction: their
+        # device contribution is exactly the zero bytes the tiers promise
+        rep = self.prism.memory_report(
+            per_agent,
+            store_report=self.store.report(),
+            agents=self.registry.counts(),
+        )
+        rep["per_agent_bytes"] = dict(per_agent)
         # the serving-dtype weight cast is a REAL resident copy on backends
         # where compute dtype != param dtype (identity casts alias, cost 0);
         # Eq. 1 accounting must include it

@@ -376,6 +376,118 @@ def run_lane(n_side: int, *, n_devices: int = 8, sync_every: int = 8,
     return rec
 
 
+def run_registry(n_registered: int, *, arch: str = "qwen2.5-0.5b",
+                 n_active: int = 8, main_capacity: int = 1024,
+                 out_dir: str | None = None) -> dict:
+    """Abstract tiered-memory accounting (ISSUE 7): what ``n_registered``
+    agents cost when only ``n_active`` hold device lanes.
+
+    Everything is ``eval_shape`` — the per-agent snapshot is the exact
+    pytree `CortexEngine.hibernate` gathers (`_gather_main_lane` over the
+    abstract TickState), so the bytes are the real hibernation payload at
+    full `main_capacity`, computed without materializing a single buffer.
+    The same math extrapolated to 1M agents is the paper's capacity claim:
+    device cost is flat in ``n_registered`` (weights + active lanes only);
+    dormant agents ride host RAM and zstd disk. The zstd ratio, when the
+    codec is installed, is measured on synthetic float32 noise — a LOWER
+    bound (real KV activations compress better than noise)."""
+    import math
+
+    from repro.checkpoint import io as ckpt_io
+    from repro.core import engine as engine_lib
+    from repro.serving.sampler import SamplingParams
+
+    cfg = get_config(arch)
+    main_spec = model_lib.CacheSpec(kind="full", capacity=main_capacity)
+    side_spec = model_lib.CacheSpec(
+        kind="synapse", n_landmarks=64, window=64, n_inject=16
+    )
+    greedy = SamplingParams(greedy=True)
+    state_abs = jax.eval_shape(
+        lambda: engine_lib.init_tick_state(
+            cfg, n_main=n_active, max_side=8, main_spec=main_spec,
+            side_spec=side_spec, ring_capacity=8, side_prompt_cap=64,
+            main_sampling=greedy, side_sampling=greedy,
+        )
+    )
+    snap_abs = jax.eval_shape(engine_lib._gather_main_lane, state_abs, 0)
+
+    def abs_bytes(tree) -> int:
+        return sum(
+            math.prod(x.shape) * x.dtype.itemsize
+            for x in jax.tree_util.tree_leaves(tree)
+        )
+
+    per_agent = abs_bytes(snap_abs)
+    weight_bytes = abs_bytes(model_lib.abstract_params(cfg))
+
+    zstd_ratio = None
+    if ckpt_io.zstandard is not None:
+        import numpy as np
+
+        rng = np.random.default_rng(0)
+        noise = jax.tree_util.tree_map(
+            lambda s: rng.standard_normal(s.shape).astype(s.dtype)
+            if s.dtype.kind == "f"
+            else rng.integers(0, 2, s.shape).astype(s.dtype),
+            snap_abs,
+        )
+        blob = ckpt_io.dumps(noise)
+        zstd_ratio = per_agent / len(blob)
+
+    def tier_table(n: int) -> dict:
+        dormant = max(0, n - n_active)
+        warm = dormant * per_agent
+        return {
+            "n_registered": n,
+            "device_bytes": weight_bytes + n_active * per_agent,
+            "warm_bytes_all_host": warm,
+            "cold_bytes_all_disk": (
+                int(warm / zstd_ratio) if zstd_ratio else None
+            ),
+            "device_bytes_if_all_resident": weight_bytes + n * per_agent,
+        }
+
+    rec = {
+        "kind": "registry_tiers",
+        "arch": arch,
+        "n_active": n_active,
+        "main_capacity": main_capacity,
+        "per_agent_snapshot_bytes": per_agent,
+        "weight_bytes": weight_bytes,
+        "zstd_ratio_noise_floor": zstd_ratio,
+        "at_n": tier_table(n_registered),
+        "at_1m": tier_table(1_000_000),
+    }
+    t = rec["at_n"]
+    print(
+        f"[dryrun] registry {arch}: {n_registered} registered / {n_active} "
+        f"active @ capacity {main_capacity}: snapshot/agent "
+        f"{per_agent/1e6:.2f}MB; device {t['device_bytes']/1e9:.2f}GB "
+        f"(vs {t['device_bytes_if_all_resident']/1e9:.2f}GB all-resident), "
+        f"host {t['warm_bytes_all_host']/1e9:.2f}GB"
+        + (
+            f", disk {t['cold_bytes_all_disk']/1e9:.2f}GB "
+            f"(zstd ratio >= {zstd_ratio:.2f})"
+            if zstd_ratio
+            else " (zstd unavailable: cold tier sized as None)"
+        )
+    )
+    m = rec["at_1m"]
+    print(
+        f"[dryrun] registry {arch}: extrapolated 1M agents: device "
+        f"{m['device_bytes']/1e9:.2f}GB flat, host+disk spill "
+        f"{m['warm_bytes_all_host']/1e12:.2f}TB raw — vs "
+        f"{m['device_bytes_if_all_resident']/1e12:.2f}TB if all resident"
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"registry__{arch}__{n_registered}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
 def _mem_dict(mem) -> dict:
     out = {}
     for attr in (
@@ -405,7 +517,17 @@ def main():
                     help="lower+compile the lane-sharded macro tick at N_SIDE "
                          "side lanes on an 8-device lane mesh (ISSUE 6 scale "
                          "dry-run; e.g. --lane 1024)")
+    ap.add_argument("--registry", type=int, default=None, metavar="N",
+                    help="abstract tiered-memory accounting for N registered "
+                         "agents over --registry-active lanes (ISSUE 7; e.g. "
+                         "--registry 10000), incl. the 1M-agent extrapolation")
+    ap.add_argument("--registry-active", type=int, default=8)
     args = ap.parse_args()
+
+    if args.registry is not None:
+        run_registry(args.registry, arch=args.arch or "qwen2.5-0.5b",
+                     n_active=args.registry_active, out_dir=args.out)
+        return
 
     if args.lane is not None:
         rec = run_lane(args.lane, out_dir=args.out)

@@ -49,8 +49,14 @@ def main():
     engine.run(args.ticks)
     print("events:", *engine.history, sep="\n  ")
     rep = engine.memory_report()
+    tiers, agents = rep["tiers"], rep["agents"]
     print(f"memory: weights {rep['weight_bytes']/1e6:.1f}MB shared across "
           f"{rep['n_agents']} agents; ctx/agent {rep['context_bytes_per_agent']/1e6:.2f}MB")
+    print(f"tiers:  hot {tiers['hot_bytes']/1e6:.2f}MB (device) | "
+          f"warm {tiers['warm_bytes']/1e6:.2f}MB (host, {tiers['n_warm']} agents) | "
+          f"cold {tiers['cold_bytes']/1e6:.2f}MB (disk, {tiers['n_cold']} agents)")
+    print(f"agents: {agents['registered']} registered, {agents['active']} active, "
+          f"{agents['hibernated']} hibernated")
 
 
 if __name__ == "__main__":

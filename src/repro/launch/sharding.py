@@ -197,6 +197,37 @@ def lane_cache_specs(caches, mesh: Mesh, *, axis: str = LANE_AXIS):
 
 
 # ---------------------------------------------------------------------------
+# lane gather/scatter (ISSUE 7: hibernate/wake one lane of a sharded state)
+# ---------------------------------------------------------------------------
+def lane_gather(tree, lane, *, axis: int = 1):
+    """Slice ONE lane (keepdim) out of every leaf of a stacked cache tree.
+
+    The demote half of hibernation: under jit with replicated
+    ``out_shardings`` this is the gather that pulls a lane's leaves off a
+    lane-sharded mesh (GSPMD inserts the collective); on one device it is
+    a plain dynamic slice. `lane` may be traced.
+    """
+    def one(a):
+        return jax.lax.dynamic_slice_in_dim(a, lane, 1, axis=axis)
+
+    return jax.tree.map(one, tree)
+
+
+def lane_scatter(tree, part, lane, *, axis: int = 1):
+    """Write a one-lane slice (from :func:`lane_gather`) back into the full
+    stacked tree at `lane` — the promote half of a wake. Casts each leaf to
+    the destination dtype (snapshots are stored bitwise in the compute
+    dtype, so this is a no-op cast in practice) and, under jit with the
+    state's ``out_shardings``, re-shards onto the lane mesh."""
+    def one(full, piece):
+        return jax.lax.dynamic_update_slice_in_dim(
+            full, piece.astype(full.dtype), lane, axis=axis
+        )
+
+    return jax.tree.map(one, tree, part)
+
+
+# ---------------------------------------------------------------------------
 # batch / cache specs
 # ---------------------------------------------------------------------------
 def batch_specs(batch_abstract, cfg: ModelConfig, mesh: Mesh):

@@ -1,0 +1,20 @@
+"""Tiered synapse memory: hot (device lane) / warm (host RAM) / cold (disk).
+
+`SynapseStore` holds hibernated agents' cache snapshots; `AgentRegistry`
+owns agent identity independent of lane slots, so engines and servers can
+register far more agents than they have live lanes.
+"""
+from .registry import ACTIVE, HIBERNATED, REGISTERED, AgentRecord, AgentRegistry
+from .store import COLD, WARM, SynapseStore, WakeTicket
+
+__all__ = [
+    "AgentRecord",
+    "AgentRegistry",
+    "SynapseStore",
+    "WakeTicket",
+    "ACTIVE",
+    "HIBERNATED",
+    "REGISTERED",
+    "WARM",
+    "COLD",
+]

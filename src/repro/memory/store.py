@@ -1,0 +1,279 @@
+"""SynapseStore: the warm/cold tiers of the agent-memory hierarchy.
+
+Tiers (paper §"million-agent capacity"; cache-hierarchy treatment per
+"Multi-Agent Memory from a Computer Architecture Perspective"):
+
+* **hot**  — a live lane inside the engine's `TickState` on device. Not
+  stored here; the store only sees agents once they leave the device.
+* **warm** — host RAM: the agent's landmark-compressed cache slice plus
+  per-lane scalars, as a numpy pytree (exact device bytes, no re-encode).
+* **cold** — disk: the same pytree through the `checkpoint/io` codec
+  (msgpack + zstd), one blob per agent; only a ShapeDtypeStruct skeleton
+  stays in RAM so a million cold agents cost ~nothing on the host.
+
+Demotion warm→cold is LRU, triggered when `warm_capacity_bytes` is
+exceeded (and on explicit `demote()`); it needs the optional `zstandard`
+dep — without it (or without a `cold_dir`) entries simply stay warm and
+the skip is counted in the report rather than raised mid-run.
+
+Promotion is asynchronous: `prefetch()` hands back a `WakeTicket` and a
+daemon worker thread reads the blob / host pytree and (optionally) lands
+it on device via the caller's `put_fn` (e.g. `jax.device_put` with the
+replicated sharding). `transfer_guard` contexts are thread-local in JAX,
+so the worker's explicit transfers never trip the engine's "no transfers
+in the overlap region" invariant — the engine only *commits* the already
+device-resident buffers at a window boundary.
+
+Snapshots are stored bitwise: a wake must reproduce the exact greedy
+stream of a lane that never hibernated, so nothing here may re-quantize.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import io as ckpt_io
+from ..core.prism import tree_bytes
+
+WARM = "warm"
+COLD = "cold"
+
+
+def _host_tree(tree):
+    """Materialize any (device or host) pytree as numpy leaves."""
+    return jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+
+
+def _skeleton(tree):
+    """Shape/dtype-only skeleton — what stays in RAM for a cold agent."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype), tree
+    )
+
+
+class WakeTicket:
+    """Handle for an in-flight asynchronous promotion (wake prefetch)."""
+
+    def __init__(self, key: str):
+        self.key = key
+        self._done = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+
+    def _resolve(self, value: Any) -> None:
+        self._value = value
+        self._done.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._done.set()
+
+    def ready(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"wake prefetch for {self.key!r} still in flight")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class SynapseStore:
+    """Warm (host RAM) + cold (zstd disk) storage for hibernated agents."""
+
+    def __init__(
+        self,
+        *,
+        warm_capacity_bytes: Optional[int] = None,
+        cold_dir: Optional[str] = None,
+        cold_level: int = 3,
+    ):
+        self.warm_capacity_bytes = warm_capacity_bytes
+        self.cold_dir = cold_dir
+        self.cold_level = cold_level
+        self._lock = threading.RLock()
+        # key -> numpy pytree; insertion order doubles as LRU order
+        self._warm: Dict[str, Any] = {}
+        self._warm_bytes: Dict[str, int] = {}
+        # key -> (path, skeleton, compressed_bytes, raw_bytes)
+        self._cold: Dict[str, tuple] = {}
+        self.stats = {
+            "puts": 0,
+            "demotions": 0,
+            "demotions_skipped": 0,
+            "prefetches": 0,
+            "cold_reads": 0,
+        }
+        self._work: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._worker: Optional[threading.Thread] = None
+
+    # -- tier plumbing ----------------------------------------------------
+    @property
+    def cold_enabled(self) -> bool:
+        return self.cold_dir is not None and ckpt_io.zstandard is not None
+
+    def _cold_path(self, key: str) -> str:
+        safe = "".join(c if (c.isalnum() or c in "._-") else "_" for c in key)
+        return os.path.join(self.cold_dir, f"{safe}.synapse.zst")
+
+    def warm_bytes(self) -> int:
+        with self._lock:
+            return sum(self._warm_bytes.values())
+
+    def keys(self):
+        with self._lock:
+            return list(self._warm) + list(self._cold)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._warm or key in self._cold
+
+    def tier_of(self, key: str) -> Optional[str]:
+        with self._lock:
+            if key in self._warm:
+                return WARM
+            if key in self._cold:
+                return COLD
+            return None
+
+    # -- demotion (device -> warm -> cold) --------------------------------
+    def put(self, key: str, tree) -> None:
+        """Park a snapshot in the warm tier (demoting LRU entries to cold
+        if over capacity). `tree` may hold device or numpy leaves."""
+        host = _host_tree(tree)
+        with self._lock:
+            stale = self._cold.pop(key, None)
+            self._warm.pop(key, None)  # re-put refreshes LRU position
+            self._warm[key] = host
+            self._warm_bytes[key] = tree_bytes(host)
+            self.stats["puts"] += 1
+            self._enforce_capacity_locked()
+        if stale is not None:  # superseded cold blob must not leak on disk
+            try:
+                os.remove(stale[0])
+            except OSError:
+                pass
+
+    def _enforce_capacity_locked(self) -> None:
+        if self.warm_capacity_bytes is None:
+            return
+        while sum(self._warm_bytes.values()) > self.warm_capacity_bytes and self._warm:
+            oldest = next(iter(self._warm))
+            if not self._demote_locked(oldest):
+                self.stats["demotions_skipped"] += 1
+                break  # no cold backing: stay warm rather than drop state
+
+    def demote(self, key: str) -> bool:
+        """Explicitly push one warm entry to the cold tier."""
+        with self._lock:
+            return self._demote_locked(key)
+
+    def demote_lru(self) -> Optional[str]:
+        with self._lock:
+            if not self._warm:
+                return None
+            oldest = next(iter(self._warm))
+            return oldest if self._demote_locked(oldest) else None
+
+    def _demote_locked(self, key: str) -> bool:
+        if key not in self._warm or not self.cold_enabled:
+            return False
+        host = self._warm[key]
+        blob = ckpt_io.dumps(host, level=self.cold_level)
+        os.makedirs(self.cold_dir, exist_ok=True)
+        path = self._cold_path(key)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+        raw = self._warm_bytes[key]
+        self._cold[key] = (path, _skeleton(host), len(blob), raw)
+        del self._warm[key]
+        del self._warm_bytes[key]
+        self.stats["demotions"] += 1
+        return True
+
+    # -- promotion (cold/warm -> host pytree -> device) -------------------
+    def get_host(self, key: str):
+        """Synchronously read a snapshot back as a numpy pytree (no tier
+        mutation — the entry stays parked until `drop()`)."""
+        with self._lock:
+            if key in self._warm:
+                return self._warm[key]
+            if key in self._cold:
+                path, skel, _, _ = self._cold[key]
+            else:
+                raise KeyError(f"no hibernated snapshot for {key!r}")
+        with open(path, "rb") as f:
+            blob = f.read()
+        with self._lock:
+            self.stats["cold_reads"] += 1
+        return ckpt_io.loads(blob, skel, numpy=True)
+
+    def prefetch(
+        self, key: str, put_fn: Optional[Callable[[Any], Any]] = None
+    ) -> WakeTicket:
+        """Kick off an async promotion; `put_fn` (if given) runs on the
+        worker thread — pass `jax.device_put` with the target sharding so
+        the host->device copy overlaps the in-flight window."""
+        if key not in self:
+            raise KeyError(f"no hibernated snapshot for {key!r}")
+        ticket = WakeTicket(key)
+        with self._lock:
+            self.stats["prefetches"] += 1
+        self._ensure_worker()
+        self._work.put((ticket, put_fn))
+        return ticket
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="synapse-prefetch", daemon=True
+            )
+            self._worker.start()
+
+    def _worker_loop(self) -> None:
+        while True:
+            ticket, put_fn = self._work.get()
+            try:
+                host = self.get_host(ticket.key)
+                value = put_fn(host) if put_fn is not None else host
+                if put_fn is not None:
+                    # force the copies to be enqueued/realized off-thread
+                    jax.block_until_ready(value)
+                ticket._resolve(value)
+            except BaseException as e:  # surfaced at ticket.result()
+                ticket._fail(e)
+
+    def drop(self, key: str) -> None:
+        """Forget a snapshot (agent is hot again, or discarded)."""
+        with self._lock:
+            self._warm.pop(key, None)
+            self._warm_bytes.pop(key, None)
+            entry = self._cold.pop(key, None)
+        if entry is not None:
+            try:
+                os.remove(entry[0])
+            except OSError:
+                pass
+
+    # -- accounting -------------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        with self._lock:
+            cold_disk = sum(e[2] for e in self._cold.values())
+            cold_raw = sum(e[3] for e in self._cold.values())
+            return {
+                "n_warm": len(self._warm),
+                "n_cold": len(self._cold),
+                "warm_bytes": sum(self._warm_bytes.values()),
+                "cold_bytes": cold_disk,
+                "cold_raw_bytes": cold_raw,
+                "cold_enabled": self.cold_enabled,
+                **{f"stat_{k}": v for k, v in self.stats.items()},
+            }

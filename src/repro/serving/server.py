@@ -20,6 +20,13 @@ Per-lane sampling arrays ride a :class:`repro.serving.sampler.SampCache`,
 invalidated on EVERY lane-composition change (admission, completion, and
 mid-flight :meth:`cancel`): a stale cache would hand a recycled lane the
 previous request's sampling params.
+
+Parking (ISSUE 7): an idle request can be :meth:`park`-ed — its lane's KV
+slice moves into a :class:`repro.memory.SynapseStore` (warm host RAM, cold
+zstd disk under pressure) and the lane frees for other traffic.
+:meth:`unpark` prefetches the slice back on a background thread; the
+request re-enters at the next admission boundary with its exact cache
+bytes and position, so its greedy continuation is unchanged.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import ByteTokenizer
+from repro.memory import SynapseStore
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
 from repro.serving.sampler import SampCache, SamplingParams, sample_lanes
@@ -61,6 +69,7 @@ class BatchServer:
         cache_kind: str = "full",
         seed: int = 0,
         mesh=None,
+        store: SynapseStore | None = None,
     ):
         """``mesh``: a lane mesh (``launch.mesh.make_lane_mesh``) spreads
         the per-request KV lanes over its ``lane`` axis — the plain-serving
@@ -82,10 +91,19 @@ class BatchServer:
             rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
             self.caches = jax.device_put(self.caches, cache_sh)
             self.params = jax.device_put(self.params, rep)
+        self._rep = (
+            jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            if cache_sh is not None
+            else None
+        )
         self.lanes: list[Request | None] = [None] * n_lanes
         self.positions = np.zeros(n_lanes, np.int64)
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        # parked requests: lane-less, KV slice in the store's warm/cold tiers
+        self.store = store if store is not None else SynapseStore()
+        self.parked: dict[int, Request] = {}
+        self._resume: list[tuple[Request, object]] = []  # (request, WakeTicket)
         self._key = jax.random.key(seed)
         self._rid = 0
         # per-lane sampling arrays + static flags, rebuilt only when lane
@@ -132,9 +150,80 @@ class BatchServer:
                 self.lanes[lane] = None
                 self._samp_cache.invalidate()
                 return True
+        if rid in self.parked:
+            self.parked.pop(rid)
+            self.store.drop(f"req{rid}")
+            return True
+        for i, (req, _) in enumerate(self._resume):
+            if req.rid == rid:
+                self._resume.pop(i)
+                self.store.drop(f"req{rid}")
+                return True
         return False
 
+    # ------------------------------------------------------------------
+    def park(self, rid: int) -> bool:
+        """Demote a decoding request off its lane: the lane's KV slice and
+        position move to the store (host RAM, spilling to disk by the
+        store's LRU policy) and the lane frees. Restoration is bitwise, so
+        the request's greedy stream continues exactly where it stopped."""
+        for lane, req in enumerate(self.lanes):
+            if req is not None and req.rid == rid:
+                snap = {
+                    "caches": jax.tree.map(
+                        lambda a: a[:, lane : lane + 1], self.caches
+                    ),
+                    "position": np.int64(self.positions[lane]),
+                }
+                self.store.put(f"req{rid}", snap)  # host pull inside
+                self.lanes[lane] = None
+                req.lane = -1
+                self._samp_cache.invalidate()
+                self.parked[rid] = req
+                return True
+        return False
+
+    def unpark(self, rid: int) -> bool:
+        """Start the async promotion of a parked request; it re-enters at
+        the next admission boundary (before queued prompts — it already
+        paid its prefill)."""
+        req = self.parked.pop(rid, None)
+        if req is None:
+            return False
+        rep = self._rep
+
+        def put_fn(host, _s=rep):
+            return jax.device_put(host, _s) if _s is not None else jax.device_put(host)
+
+        self._resume.append((req, self.store.prefetch(f"req{rid}", put_fn)))
+        return True
+
+    def _admit_unparked(self, *, wait: bool = False):
+        """Land resume tickets whose prefetched buffers are ready (all of
+        them with ``wait=True``) into free lanes."""
+        still = []
+        for req, ticket in self._resume:
+            lane = next((i for i, r in enumerate(self.lanes) if r is None), -1)
+            if lane < 0 or not (wait or ticket.ready()):
+                still.append((req, ticket))
+                continue
+            part = ticket.result()
+            self.caches = jax.tree.map(
+                lambda full, piece: full.at[:, lane : lane + 1].set(
+                    piece.astype(full.dtype)
+                ),
+                self.caches,
+                part["caches"],
+            )
+            self.positions[lane] = int(part["position"])
+            req.lane = lane
+            self.lanes[lane] = req
+            self._samp_cache.invalidate()
+            self.store.drop(f"req{req.rid}")
+        self._resume = still
+
     def _admit(self):
+        self._admit_unparked()
         for lane in range(self.n_lanes):
             if self.lanes[lane] is None and self.queue:
                 req = self.queue.pop(0)
@@ -210,7 +299,7 @@ class BatchServer:
         request waiting on a free lane, and no lane at its token budget.
         EOS completions stay unpredictable — those cost a rollback instead.
         """
-        if self.queue and any(r is None for r in self.lanes):
+        if (self.queue or self._resume) and any(r is None for r in self.lanes):
             return False
         for req in self.lanes:
             if req is not None:
@@ -237,7 +326,9 @@ class BatchServer:
         if not pipeline:
             for _ in range(max_ticks):
                 if not self.queue and not any(self.lanes):
-                    break
+                    if not self._resume:
+                        break
+                    self._admit_unparked(wait=True)  # idle: block on tickets
                 self.tick()
             return self.finished
 
@@ -248,6 +339,9 @@ class BatchServer:
             if inflight is None:
                 self._admit()
                 if not any(self.lanes):
+                    if self._resume:
+                        self._admit_unparked(wait=True)  # idle: block on tickets
+                        continue
                     break
                 inflight = self._step(self._host_toks())
                 ticks += 1

@@ -1,0 +1,159 @@
+"""checkpoint/io codec contract (ISSUE 7 satellite).
+
+The cold tier of the tiered synapse memory stores one `dumps()` blob per
+hibernated agent and keeps only a ShapeDtypeStruct skeleton in RAM, so the
+codec must round-trip BITWISE (a woken agent replays its greedy stream
+exactly) across dtypes, restore into abstract skeletons, and fail loudly —
+KeyError — when a blob is missing a leaf the skeleton expects.
+
+The raw msgpack layer (`_encode_tree`/`_decode_tree`) has no optional deps
+and is exercised unconditionally; the public zstd entry points gate on the
+`zstandard` install exactly like the production code does.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+
+needs_zstd = pytest.mark.skipif(
+    ckpt_io.zstandard is None, reason="zstandard not installed"
+)
+
+
+def _mixed_tree(seed: int = 0):
+    """Nested dict/list/tuple pytree over every dtype family the engine
+    snapshots: f32 caches, int32 tokens/steps, bool masks, int64 scalars."""
+    rng = np.random.default_rng(seed)
+    return {
+        "caches": [
+            {"k": rng.standard_normal((3, 1, 4, 2)).astype(np.float32),
+             "v": rng.standard_normal((3, 1, 4, 2)).astype(np.float32)},
+            {"k": rng.standard_normal((2, 5)).astype(np.float16),
+             "v": rng.standard_normal((2, 5)).astype(np.float64)},
+        ],
+        "tok": np.int32(17),
+        "pos": np.int64(123456789),
+        "mask": rng.random(7) > 0.5,
+        "pair": (np.arange(6, dtype=np.uint8).reshape(2, 3),
+                 np.asarray([-1, 0, 1], np.int16)),
+    }
+
+
+def _assert_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype
+        assert x.shape == y.shape
+        assert x.tobytes() == y.tobytes()  # bitwise, incl. NaN payloads
+
+
+def _skeleton(tree):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype), tree
+    )
+
+
+def test_raw_codec_roundtrip_bitwise():
+    tree = _mixed_tree()
+    raw = ckpt_io._encode_tree(tree)
+    back = ckpt_io._decode_tree(raw, tree, numpy=True)
+    _assert_bitwise(tree, back)
+    for leaf in jax.tree.leaves(back):
+        assert isinstance(leaf, np.ndarray)
+
+
+def test_raw_codec_restores_into_skeleton():
+    """`like` may be all ShapeDtypeStructs — the cold tier keeps only the
+    skeleton in RAM, never the arrays."""
+    tree = _mixed_tree(1)
+    raw = ckpt_io._encode_tree(tree)
+    back = ckpt_io._decode_tree(raw, _skeleton(tree), numpy=True)
+    _assert_bitwise(tree, back)
+
+
+def test_raw_codec_device_leaves():
+    """numpy=False lands jnp arrays; encoding accepts device arrays too."""
+    tree = jax.tree.map(lambda a: jax.numpy.asarray(a), _mixed_tree(2))
+    raw = ckpt_io._encode_tree(tree)
+    back = ckpt_io._decode_tree(raw, _skeleton(tree))
+    _assert_bitwise(tree, back)
+    assert all(isinstance(x, jax.Array) for x in jax.tree.leaves(back))
+
+
+def test_missing_leaf_raises_keyerror():
+    tree = _mixed_tree(3)
+    raw = ckpt_io._encode_tree({"tok": tree["tok"]})
+    with pytest.raises(KeyError, match="checkpoint missing leaf"):
+        ckpt_io._decode_tree(raw, tree, numpy=True)
+
+
+def test_extra_leaves_are_ignored():
+    """A blob may carry more than the skeleton asks for (forward compat);
+    decode selects by path."""
+    tree = _mixed_tree(4)
+    raw = ckpt_io._encode_tree(tree)
+    back = ckpt_io._decode_tree(raw, {"tok": tree["tok"]}, numpy=True)
+    assert back["tok"] == tree["tok"]
+
+
+def test_dumps_requires_zstd_when_missing():
+    if ckpt_io.zstandard is not None:
+        pytest.skip("zstandard installed: the gate cannot fire")
+    with pytest.raises(ModuleNotFoundError, match="zstandard"):
+        ckpt_io.dumps({"x": np.zeros(2)})
+
+
+@needs_zstd
+def test_dumps_loads_roundtrip_bitwise():
+    tree = _mixed_tree(5)
+    blob = ckpt_io.dumps(tree)
+    assert isinstance(blob, bytes)
+    _assert_bitwise(tree, ckpt_io.loads(blob, tree, numpy=True))
+    _assert_bitwise(tree, ckpt_io.loads(blob, _skeleton(tree), numpy=True))
+
+
+@needs_zstd
+def test_dumps_compresses_redundant_payloads():
+    tree = {"z": np.zeros((256, 256), np.float32)}
+    blob = ckpt_io.dumps(tree)
+    assert len(blob) < tree["z"].nbytes // 10
+
+
+@needs_zstd
+def test_loads_missing_leaf_raises():
+    blob = ckpt_io.dumps({"a": np.ones(3, np.float32)})
+    like = {"a": np.ones(3, np.float32), "b": np.ones(2, np.int32)}
+    with pytest.raises(KeyError, match="missing leaf"):
+        ckpt_io.loads(blob, like, numpy=True)
+
+
+@needs_zstd
+def test_save_load_file_roundtrip(tmp_path):
+    tree = _mixed_tree(6)
+    path = str(tmp_path / "nested" / "snap.zst")
+    ckpt_io.save(path, tree)
+    assert not (tmp_path / "nested" / "snap.zst.tmp").exists()  # atomic
+    _assert_bitwise(tree, ckpt_io.load(path, tree, numpy=True))
+
+
+@needs_zstd
+def test_roundtrip_dataclass_tree():
+    """Structured pytrees (the engine snapshots dataclass caches) survive:
+    flatten-with-path keys the leaves, not the container type."""
+
+    @jax.tree_util.register_dataclass
+    @dataclasses.dataclass
+    class Snap:
+        k: np.ndarray
+        v: np.ndarray
+
+    tree = Snap(k=np.arange(12, dtype=np.float32).reshape(3, 4),
+                v=np.arange(4, dtype=np.int32))
+    back = ckpt_io.loads(ckpt_io.dumps(tree), _skeleton(tree), numpy=True)
+    assert isinstance(back, Snap)
+    _assert_bitwise(tree, back)

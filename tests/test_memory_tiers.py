@@ -1,0 +1,594 @@
+"""Tiered synapse memory (ISSUE 7 acceptance criteria).
+
+The contract this suite pins down:
+
+* STORE — `SynapseStore` round-trips snapshots BITWISE through the warm
+  (host numpy) tier, demotes LRU entries to the cold (zstd disk) tier when
+  over `warm_capacity_bytes` — skipping (and counting) demotions when the
+  optional zstd backing is absent rather than raising mid-run — and
+  promotes asynchronously via `prefetch()` WakeTickets on a daemon thread;
+* ZERO DEVICE BYTES — a hibernated agent vanishes from
+  `memory_report()['per_agent_bytes']`: its context costs exactly zero
+  device bytes and reappears under `tiers.warm_bytes`/`cold_bytes`, with
+  the registered-vs-active split in `agents`;
+* PARITY — an agent hibernated at a drain boundary and woken later (into a
+  DIFFERENT lane) replays its greedy stream bitwise: its token stream is a
+  prefix-extension of a never-hibernated reference, for main AND side
+  agents, on the single-device engine and the forced-8-device lane mesh,
+  including randomized hibernate/wake/run interleavings (hypothesis);
+* ASYNC WAKE — `wake()` returns immediately; the prefetched buffers commit
+  at a window boundary between the ring fetch and the next dispatch, so
+  the pipeline never flushes and the overlapped post-processing region
+  still issues ZERO device transfers (`jax.transfer_guard("disallow")`);
+* POLICY — `submit_agent` evicts the LRU resident when lanes are full
+  (refusing only when every main has live side streams),
+  `hibernate_idle_ticks` demotes idle mains at boundaries, and mains with
+  pending side merges can never hibernate;
+* SERVER — `BatchServer.park()/unpark()` continue a request's greedy
+  stream bitwise after its KV lane is recycled.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import hypothesis_tools
+from repro.checkpoint import io as ckpt_io
+from repro.configs import get_config
+from repro.core.engine import CortexEngine
+from repro.core.prism import Prism
+from repro.data.tokenizer import ByteTokenizer
+from repro.launch.mesh import make_lane_mesh
+from repro.memory import (
+    ACTIVE,
+    HIBERNATED,
+    REGISTERED,
+    AgentRegistry,
+    SynapseStore,
+)
+from repro.models import model as model_lib
+from repro.serving.sampler import SamplingParams
+from repro.serving.server import BatchServer
+
+N_DEV = jax.device_count()
+needs_mesh = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+needs_zstd = pytest.mark.skipif(
+    ckpt_io.zstandard is None, reason="zstandard not installed"
+)
+
+PROMPT_A = "calm text with no tags at all"
+PROMPT_B = "another quiet prompt, still tagless"
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_config("qwen2.5-0.5b", reduced=True), compute_dtype="float32"
+    )
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, *, n_main=2, max_side=2, sync_every=4,
+            side_max_steps=50, mesh=None, store=None, hibernate_idle_ticks=None,
+            pipeline=True):
+    return CortexEngine(
+        Prism(params, cfg), ByteTokenizer(cfg.vocab_size), n_main=n_main,
+        max_side=max_side, main_capacity=128, side_max_steps=side_max_steps,
+        inject_tokens=8, theta=-1.0, sampling=SamplingParams(greedy=True),
+        sync_every=sync_every, pipeline=pipeline, mesh=mesh, store=store,
+        hibernate_idle_ticks=hibernate_idle_ticks,
+    )
+
+
+def _tree_equal_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert x.tobytes() == y.tobytes()
+
+
+def _snap(seed, kb=4):
+    rng = np.random.default_rng(seed)
+    return {
+        "caches": rng.standard_normal(kb * 256).astype(np.float32),
+        "tok": np.int32(seed),
+        "pos": np.int64(seed * 10),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SynapseStore / AgentRegistry units
+# ---------------------------------------------------------------------------
+
+def test_store_warm_roundtrip_bitwise():
+    store = SynapseStore()
+    snap = _snap(1)
+    store.put("a", snap)
+    assert store.tier_of("a") == "warm"
+    _tree_equal_bitwise(snap, store.get_host("a"))
+    rep = store.report()
+    assert rep["n_warm"] == 1 and rep["n_cold"] == 0
+    assert rep["warm_bytes"] == sum(
+        np.asarray(x).nbytes for x in jax.tree.leaves(snap)
+    )
+    store.drop("a")
+    assert store.tier_of("a") is None and "a" not in store
+
+
+def test_store_accepts_device_trees():
+    store = SynapseStore()
+    dev = jax.tree.map(jax.numpy.asarray, _snap(2))  # int64 narrows w/o x64
+    store.put("dev", dev)
+    back = store.get_host("dev")
+    _tree_equal_bitwise(jax.tree.map(np.asarray, jax.device_get(dev)), back)
+    assert all(isinstance(x, np.ndarray) for x in jax.tree.leaves(back))
+
+
+@needs_zstd
+def test_store_lru_demotes_to_cold(tmp_path):
+    one = sum(np.asarray(x).nbytes for x in jax.tree.leaves(_snap(0)))
+    store = SynapseStore(warm_capacity_bytes=2 * one, cold_dir=str(tmp_path))
+    snaps = {k: _snap(i) for i, k in enumerate("abc")}
+    for k, s in snaps.items():
+        store.put(k, s)
+    # capacity fits two: the LRU entry ("a") spilled to disk
+    assert store.tier_of("a") == "cold"
+    assert store.tier_of("b") == "warm" and store.tier_of("c") == "warm"
+    rep = store.report()
+    assert rep["n_cold"] == 1 and rep["cold_bytes"] > 0
+    assert rep["cold_raw_bytes"] == one
+    assert any(tmp_path.iterdir())
+    for k, s in snaps.items():  # cold read is bitwise too
+        _tree_equal_bitwise(s, store.get_host(k))
+    # re-putting refreshes LRU order: "b" becomes oldest and spills next
+    store.put("b", snaps["b"])  # no-op content, LRU refresh
+    store.put("a", snaps["a"])  # back to warm; "c" now oldest... cap check
+    assert store.stats["demotions"] >= 2
+    store.drop("a")
+    store.drop("b")
+    store.drop("c")
+    assert not any(p.suffix != ".tmp" for p in tmp_path.iterdir())
+
+
+def test_store_demotion_skipped_without_cold_backing():
+    """No cold_dir (or no zstandard): over-capacity entries stay warm and
+    the skip is COUNTED — state is never dropped, nothing raises mid-run."""
+    one = sum(np.asarray(x).nbytes for x in jax.tree.leaves(_snap(0)))
+    store = SynapseStore(warm_capacity_bytes=one)
+    store.put("a", _snap(1))
+    store.put("b", _snap(2))
+    assert store.tier_of("a") == "warm" and store.tier_of("b") == "warm"
+    assert store.stats["demotions_skipped"] >= 1
+    assert store.report()["warm_bytes"] == 2 * one
+
+
+def test_store_prefetch_async_ticket():
+    store = SynapseStore()
+    snap = _snap(3)
+    store.put("a", snap)
+    ticket = store.prefetch("a", lambda host: jax.device_put(host))
+    got = ticket.result(timeout=30)
+    assert ticket.ready()
+    assert all(isinstance(x, jax.Array) for x in jax.tree.leaves(got))
+    # compare post-device_put (int64 narrows without x64, on both sides)
+    _tree_equal_bitwise(jax.device_get(jax.device_put(snap)), jax.device_get(got))
+    with pytest.raises(KeyError):
+        store.prefetch("missing")
+    # a failing put_fn surfaces at result(), not on the engine thread
+    bad = store.prefetch("a", lambda host: (_ for _ in ()).throw(RuntimeError("boom")))
+    with pytest.raises(RuntimeError, match="boom"):
+        bad.result(timeout=30)
+
+
+def test_registry_transitions_and_lru():
+    reg = AgentRegistry()
+    for aid in ("a", "b", "c"):
+        reg.register(aid, "main")
+    assert reg.counts() == {"registered": 3, "active": 0, "hibernated": 0,
+                            "dormant": 3}
+    reg.bind("a", 0)
+    reg.bind("b", 1)
+    assert reg.agent_at(1, "main").agent_id == "b"
+    assert reg.lru_active("main").agent_id == "a"
+    assert reg.lru_active("main", exclude=("a",)).agent_id == "b"
+    reg.hibernate("a", {"x": 1})
+    assert reg.get("a").status == HIBERNATED and reg.get("a").saved == {"x": 1}
+    assert reg.counts()["hibernated"] == 1 and reg.counts()["dormant"] == 2
+    reg.release("a")
+    assert reg.get("a").status == REGISTERED and reg.get("a").saved is None
+    reg.forget("c")
+    assert "c" not in reg and reg.counts()["registered"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine: hibernate / wake
+# ---------------------------------------------------------------------------
+
+def test_hibernate_zero_device_bytes_and_tier_report(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    eng.run(8)
+    rep0 = eng.memory_report()
+    alice_bytes = rep0["per_agent_bytes"]["alice"]
+    assert alice_bytes > 0
+    eng.hibernate("alice")
+    rep = eng.memory_report()
+    # the acceptance bar: a hibernated agent contributes ~0 device bytes —
+    # exactly 0 here, because its lane slice left the device entirely
+    assert "alice" not in rep["per_agent_bytes"]
+    # warm holds the full snapshot: cache slice + hidden/token/pos scalars
+    assert alice_bytes <= rep["tiers"]["warm_bytes"] <= alice_bytes + 4096
+    assert rep["tiers"]["hot_bytes"] == rep0["tiers"]["hot_bytes"] - alice_bytes
+    assert rep["agents"] == {"registered": 1, "active": 0, "hibernated": 1,
+                             "dormant": 1}
+    assert eng.store.tier_of("alice") == "warm"
+    assert eng.stats["hibernates"] == 1
+    # double-hibernate and waking an active agent are both well-defined
+    with pytest.raises(ValueError, match="not active"):
+        eng.hibernate("alice")
+
+
+def test_hibernate_wake_parity_main_different_lane(setup):
+    """An agent hibernated at tick 8, displaced by a new resident, and
+    woken into the OTHER lane replays its greedy stream bitwise (prefix of
+    the never-hibernated reference)."""
+    cfg, params = setup
+    ref = _engine(cfg, params)
+    ref.submit(PROMPT_A, lane=0, agent_id="alice")
+    ref.run(20)
+    ref_tokens = list(ref.mains[0].tokens)
+
+    eng = _engine(cfg, params)
+    eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    eng.run(8)
+    parked_len = len(eng.mains[0].tokens)
+    eng.hibernate("alice")
+    eng.submit(PROMPT_B, lane=0, agent_id="bob")  # lane 0 is recycled
+    eng.run(4)
+    alice = eng.wake("alice", wait=True)
+    assert alice.active and alice.lane == 1  # woke into a different lane
+    eng.run(12)
+    assert len(alice.tokens) == parked_len + 12
+    assert alice.tokens == ref_tokens[: len(alice.tokens)]
+    assert eng.stats["wakes"] == 1
+    # bob is undisturbed by the wake: his own reference run matches
+    ref2 = _engine(cfg, params)
+    ref2.submit(PROMPT_B, lane=0, agent_id="bob")
+    ref2.run(16)
+    assert eng.mains[0].tokens == ref2.mains[0].tokens[: len(eng.mains[0].tokens)]
+
+
+def test_wake_commits_inside_run_without_flush(setup):
+    """`wake()` without wait=True: the commit rides `run()`'s window
+    boundaries while other lanes keep decoding — the pipeline stays
+    engaged (overlapped drains still happen) and parity holds."""
+    cfg, params = setup
+    ref = _engine(cfg, params)
+    ref.submit(PROMPT_A, lane=0, agent_id="alice")
+    ref.run(40)
+    ref_tokens = list(ref.mains[0].tokens)
+
+    eng = _engine(cfg, params)
+    eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    eng.run(8)
+    eng.hibernate("alice")
+    eng.submit(PROMPT_B, lane=0, agent_id="bob")
+    rec = eng.wake("alice")  # async: returns the still-hibernated record
+    assert rec.status == HIBERNATED
+    over0 = eng.stats["overlapped_drains"]
+    eng.run(24)
+    alice = eng.mains[1]
+    assert alice.agent_id == "alice" and alice.active
+    assert eng.stats["wakes"] == 1
+    assert len(alice.tokens) > 8  # advanced after the in-run commit
+    assert alice.tokens == ref_tokens[: len(alice.tokens)]
+    assert eng.stats["overlapped_drains"] > over0  # pipeline never flushed
+    assert any(e["event"] == "wake" for e in eng.history)
+
+
+def test_wake_overlap_region_zero_transfers(setup):
+    """The manual pipelined window, with a wake committed between the ring
+    fetch and the next dispatch: the overlapped post-processing region
+    (gate + dispatch t+1 + window-t host work) still issues ZERO device
+    transfers under `jax.transfer_guard("disallow")`."""
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    eng.run(8)
+    eng.hibernate("alice")
+    eng.submit(PROMPT_B, lane=0, agent_id="bob")
+    eng.drain()
+    eng.wake("alice")
+    eng._wake_tickets["alice"].result(timeout=60)  # prefetch landed on device
+
+    eng._dispatch_window(4)                      # window t
+    eng._prefetch_rings()
+    rings = eng._fetch_rings()
+    assert eng._commit_ready_wakes(mark_fresh=True) == 1  # boundary commit
+    alice = eng.mains[1]
+    assert alice.agent_id == "alice" and alice.active
+    n_bob = len(eng.mains[0].tokens)
+    n_alice = len(alice.tokens)
+    with jax.transfer_guard("disallow"):
+        assert eng._gate(rings, 4)
+        eng._dispatch_window(4)                  # window t+1: alice aboard
+        eng._postprocess(rings, 4, overlapped=True)
+    # window t predates the wake: only bob's mirror advances...
+    assert len(eng.mains[0].tokens) == n_bob + 4
+    assert len(alice.tokens) == n_alice
+    eng.drain()  # ...window t+1 advances both
+    assert len(eng.mains[0].tokens) == n_bob + 8
+    assert len(alice.tokens) == n_alice + 4
+    # and the resumed stream is still the reference prefix
+    ref = _engine(cfg, params)
+    ref.submit(PROMPT_A, lane=0, agent_id="alice")
+    ref.run(16)
+    assert alice.tokens == ref.mains[0].tokens[: len(alice.tokens)]
+
+
+def test_hibernate_wake_parity_side(setup):
+    """Side agents hibernate/wake too: the side stream freezes while
+    parked (its step budget does not advance) and resumes bitwise."""
+    cfg, params = setup
+    ref = _engine(cfg, params)
+    m = ref.submit(PROMPT_A, lane=0, agent_id="alice")
+    assert ref._spawn_side(m, "probe the claim") is not None
+    ref.run(40)
+    ref_side = list(ref.sides[0].tokens)
+
+    eng = _engine(cfg, params)
+    m = eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    assert eng._spawn_side(m, "probe the claim") is not None
+    eng.run(28)  # past the task-prompt phase: the side is generating
+    side0 = eng.sides[0]
+    assert len(side0.tokens) > side0.prompt_len
+    parked_len, parked_steps = len(side0.tokens), side0.steps
+    eng.hibernate("side0")
+    eng.run(4)  # main advances; the parked side (and its budget) does not
+    side = eng.wake("side0", wait=True)
+    assert side.active
+    eng.run(8)
+    assert side.steps == parked_steps + 8  # budget frozen while parked
+    assert len(side.tokens) == parked_len + 8
+    assert side.tokens == ref_side[: len(side.tokens)]
+    # the main ran 40 ticks in both engines: bitwise identical
+    assert eng.mains[0].tokens == ref.mains[0].tokens
+
+
+def test_hibernate_refuses_main_with_children(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    m = eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    assert eng._spawn_side(m, "child stream") is not None
+    with pytest.raises(ValueError, match="side streams still target"):
+        eng.hibernate("alice")
+    # ...including HIBERNATED children: their merge still targets the lane
+    eng.run(4)
+    eng.hibernate("side0")
+    with pytest.raises(ValueError, match="side streams still target"):
+        eng.hibernate("alice")
+
+
+def test_submit_agent_lru_eviction(setup):
+    """Lane-less submits: a full house hibernates the least-recently-bound
+    resident, so max lanes bounds *active* agents, not registered ones."""
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    a = eng.submit_agent(PROMPT_A)
+    b = eng.submit_agent(PROMPT_B)
+    assert {a.lane, b.lane} == {0, 1}
+    eng.run(4)
+    c = eng.submit_agent("third agent enters")  # evicts a (LRU)
+    assert c.active
+    assert eng.registry.get(a.agent_id).status == HIBERNATED
+    assert eng.registry.get(b.agent_id).status == ACTIVE
+    assert eng.store.tier_of(a.agent_id) == "warm"
+    rep = eng.memory_report()
+    assert rep["agents"]["registered"] == 3
+    assert rep["agents"]["active"] == 2 and rep["agents"]["hibernated"] == 1
+    # the evictee comes back when a lane frees, stream intact
+    parked = len(a.tokens)
+    eng.hibernate(b.agent_id)
+    woken = eng.wake(a.agent_id, wait=True)
+    eng.run(4)
+    assert len(woken.tokens) == parked + 4
+
+
+def test_submit_agent_refuses_when_all_blocked(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, n_main=1)
+    m = eng.submit_agent(PROMPT_A)
+    assert eng._spawn_side(m, "pin the lane") is not None
+    with pytest.raises(RuntimeError, match="no evictable resident"):
+        eng.submit_agent(PROMPT_B)
+
+
+def test_auto_hibernate_idle_ticks(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, hibernate_idle_ticks=8)
+    eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    eng.run(16)
+    rec = eng.registry.get("alice")
+    assert rec.status == HIBERNATED
+    assert eng.stats["hibernates"] == 1
+    assert not eng._any_active()
+    assert "alice" in eng.store
+    alice = eng.wake("alice", wait=True)
+    n = len(alice.tokens)
+    eng.run(4)
+    assert len(alice.tokens) == n + 4
+
+
+def test_resubmit_hibernated_id_drops_snapshot(setup):
+    """Re-submitting an agent_id that is parked replaces the context
+    outright: the stale snapshot and any pending wake are discarded."""
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    eng.run(4)
+    eng.hibernate("alice")
+    eng.wake("alice")  # pending ticket, then changed our mind:
+    eng.submit(PROMPT_B, lane=0, agent_id="alice")
+    assert "alice" not in eng.store
+    assert not eng._pending_wakes
+    assert eng.registry.get("alice").status == ACTIVE
+    eng.run(4)  # no stray commit resurrects the old context
+    assert eng.mains[0].agent_id == "alice"
+    assert eng.mains[1].active is False
+
+
+# ---------------------------------------------------------------------------
+# Lane-mesh parity
+# ---------------------------------------------------------------------------
+
+def _hibernate_script(eng):
+    eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    eng.run(8)
+    eng.hibernate("alice")
+    eng.submit(PROMPT_B, lane=0, agent_id="bob")
+    eng.run(4)
+    eng.wake("alice", wait=True)
+    eng.run(8)
+    return list(eng.mains[0].tokens), list(eng.mains[1].tokens), [
+        (e["event"], e.get("agent")) for e in eng.history
+    ]
+
+
+def test_mesh1_hibernate_wake_parity(setup):
+    """A 1-device lane mesh exercises the full shard_map + replicated
+    gather/scatter wake path inside tier-1."""
+    cfg, params = setup
+    plain = _hibernate_script(_engine(cfg, params))
+    mesh = _hibernate_script(_engine(cfg, params, mesh=make_lane_mesh(1)))
+    assert mesh == plain
+
+
+@needs_mesh
+def test_mesh8_hibernate_wake_parity(setup):
+    """The greedy contract includes the mesh: hibernate/wake on a real
+    8-device lane mesh is bitwise identical to the single-device engine."""
+    cfg, params = setup
+    plain = _hibernate_script(_engine(cfg, params, max_side=8))
+    mesh = _hibernate_script(
+        _engine(cfg, params, max_side=8, mesh=make_lane_mesh(8))
+    )
+    assert mesh == plain
+
+
+# ---------------------------------------------------------------------------
+# Randomized interleavings (hypothesis)
+# ---------------------------------------------------------------------------
+
+given, settings, st = hypothesis_tools()
+
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("run"), st.integers(min_value=1, max_value=9)),
+        st.tuples(st.just("hib"), st.just(0)),
+        st.tuples(st.just("wake"), st.just(0)),
+    ),
+    min_size=3,
+    max_size=8,
+)
+
+
+@settings(max_examples=5, deadline=None)
+@given(ops=_OPS)
+def test_property_churn_parity(setup, ops):
+    """Random run/hibernate/wake interleavings: bob (never hibernated, on
+    lane 1 in both engines) stays BITWISE identical to the reference, and
+    alice's stream is always a prefix of her never-hibernated self."""
+    cfg, params = setup
+    ref = _engine(cfg, params)
+    ref.submit(PROMPT_A, lane=0, agent_id="alice")
+    ref.submit(PROMPT_B, lane=1, agent_id="bob")
+
+    eng = _engine(cfg, params)
+    eng.submit(PROMPT_A, lane=0, agent_id="alice")
+    eng.submit(PROMPT_B, lane=1, agent_id="bob")
+
+    for op, n in ops:
+        if op == "run":
+            ref.run(n)
+            eng.run(n)
+        elif op == "hib" and eng.registry.get("alice").status == ACTIVE:
+            eng.hibernate("alice")
+        elif op == "wake" and eng.registry.get("alice").status == HIBERNATED:
+            eng.wake("alice")  # async: commits at a later boundary
+    if eng.registry.get("alice").status != ACTIVE:
+        eng.wake("alice", wait=True)
+    ref.run(4)
+    eng.run(4)
+
+    bob = next(m for m in eng.mains if m.agent_id == "bob")
+    alice = next(m for m in eng.mains if m.agent_id == "alice")
+    assert bob.tokens == ref.mains[1].tokens
+    assert alice.tokens == ref.mains[0].tokens[: len(alice.tokens)]
+    assert eng.stats["hibernates"] == eng.stats["wakes"]
+
+
+# ---------------------------------------------------------------------------
+# BatchServer park / unpark
+# ---------------------------------------------------------------------------
+
+def _server(cfg, params, n_lanes=2):
+    return BatchServer(
+        params, cfg, ByteTokenizer(cfg.vocab_size), n_lanes=n_lanes,
+        capacity=128, sampling=SamplingParams(greedy=True),
+    )
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_server_park_unpark_stream_parity(setup, pipeline):
+    cfg, params = setup
+    ref = _server(cfg, params)
+    ref.submit(PROMPT_A, max_new_tokens=20)
+    ref_req = ref.run_until_done(pipeline=pipeline)[0]
+
+    srv = _server(cfg, params)
+    rid = srv.submit(PROMPT_A, max_new_tokens=20)
+    for _ in range(6):
+        srv.tick()
+    assert srv.park(rid)
+    assert srv.lanes == [None, None] and rid in srv.parked
+    assert srv.store.tier_of(f"req{rid}") == "warm"
+    rid2 = srv.submit(PROMPT_B, max_new_tokens=6)  # recycles the lane
+    for _ in range(3):
+        srv.tick()
+    assert srv.unpark(rid)
+    done = {r.rid: r for r in srv.run_until_done(pipeline=pipeline)}
+    assert done[rid].tokens == ref_req.tokens  # bitwise continuation
+    assert done[rid2].done
+    assert f"req{rid}" not in srv.store  # snapshot dropped on resume
+
+
+def test_server_cancel_parked_and_resuming(setup):
+    cfg, params = setup
+    srv = _server(cfg, params)
+    rid = srv.submit(PROMPT_A, max_new_tokens=16)
+    for _ in range(4):
+        srv.tick()
+    srv.park(rid)
+    assert srv.cancel(rid)  # parked: snapshot dropped
+    assert f"req{rid}" not in srv.store and rid not in srv.parked
+
+    rid2 = srv.submit(PROMPT_B, max_new_tokens=16)
+    for _ in range(4):
+        srv.tick()
+    srv.park(rid2)
+    srv.unpark(rid2)
+    assert srv.cancel(rid2)  # mid-resume: ticket abandoned, snapshot dropped
+    assert f"req{rid2}" not in srv.store and not srv._resume
+    assert srv.run_until_done() == []
