@@ -88,6 +88,34 @@ def run(*, registered: int = 256, active: int = 8, sync_every: int = 8,
             store._enforce_capacity_locked()
         rep = eng.memory_report()
 
+    # cold-read integrity overhead (ISSUE 8): every production cold read
+    # verifies the frame checksum; A/B the same blob with verification on
+    # vs off (PR 7's unverified behavior) to price the resilience layer
+    verify_ab = None
+    cold_keys = [k for k in store.keys() if store.tier_of(k) == "cold"]
+    if cold_keys:
+        key, reps = cold_keys[0], 20
+        for arm in ("verify", "noverify"):
+            store.get_host(key, verify=arm == "verify")  # warm the page cache
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            store.get_host(key, verify=True)
+        verify_s = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            store.get_host(key, verify=False)
+        noverify_s = (time.perf_counter() - t0) / reps
+        verify_ab = {
+            "cold_read_verify_s": verify_s,
+            "cold_read_noverify_s": noverify_s,
+            "verify_overhead_s": verify_s - noverify_s,
+            "verify_overhead_frac": (verify_s - noverify_s) / max(noverify_s, 1e-12),
+            "blob_bytes": store.report()["cold_bytes"] // max(1, len(cold_keys)),
+        }
+        emit("hibernate.cold_read_verify_overhead", (verify_s - noverify_s) * 1e6,
+             f"verify={verify_s*1e6:.0f}us noverify={noverify_s*1e6:.0f}us "
+             f"(+{100 * verify_ab['verify_overhead_frac']:.1f}%)")
+
     # wake-to-first-token: free a lane, then promote the LRU dormant agent
     wakes = []
     for _ in range(wake_reps):
@@ -123,4 +151,5 @@ def run(*, registered: int = 256, active: int = 8, sync_every: int = 8,
         "wakes": eng.stats["wakes"],
         "wake_to_first_token_s": wake_s,
         "wake_samples": wakes,
+        "cold_read_verify": verify_ab,
     }

@@ -101,6 +101,99 @@ def hibernate_smoke() -> dict:
     return out
 
 
+def chaos_smoke() -> dict:
+    """CI gate for the resilience layer (ISSUE 8): a scripted fault storm —
+    bit-flipped cold blob, transient read failures, a murdered prefetch
+    worker — against hibernate/wake churn. The engine must degrade
+    per-agent (permanent loss -> LOST, transient -> retried/rewoken), keep
+    ticking, and leave untouched lanes bitwise identical to a fault-free
+    engine. Writes the fault-injection report artifact."""
+    import tempfile
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.engine import CortexEngine
+    from repro.core.prism import Prism
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.memory import ACTIVE, HIBERNATED, LOST, FaultInjector, SynapseStore
+    from repro.models import model as model_lib
+    from repro.serving.sampler import SamplingParams
+
+    cfg = get_config("qwen2.5-0.5b", reduced=True)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    tok = ByteTokenizer(cfg.vocab_size)
+    prompts = {"A": "agent A considers the first question at length.",
+               "B": "agent B writes a careful second answer here.",
+               "C": "agent C is the untouched control stream."}
+
+    def build(store=None):
+        eng = CortexEngine(Prism(params, cfg), tok, n_main=3, max_side=2,
+                           main_capacity=128, theta=1e9, sync_every=4,
+                           sampling=SamplingParams(greedy=True), store=store)
+        for lane, (aid, p) in enumerate(prompts.items()):
+            eng.submit(p, lane=lane, agent_id=aid)
+        return eng
+
+    ref = build()
+    ref.run(32)
+    ref_c = next(m for m in ref.mains if m.agent_id == "C").text
+
+    faults = (
+        FaultInjector()
+        .flip_write("A")                          # permanent: A's blob corrupt on disk
+        .fail_read("B", nth=1, times=2)           # transient: first wake retries through
+        .kill_worker_on_read("B", nth=4)          # second wake murders the worker
+    )
+    cold = tempfile.mkdtemp(prefix="chaos_cold_")
+    store = SynapseStore(warm_capacity_bytes=1, cold_dir=cold, faults=faults,
+                         wake_backoff_s=0.001)
+    eng = build(store)
+    eng.run(16)
+    eng.hibernate("A")
+    eng.hibernate("B")
+    eng.wake("A")   # corrupt blob -> quarantine -> LOST; engine keeps ticking
+    eng.wake("B")   # two injected read failures -> retry -> lands
+    eng.run(8)
+    eng.flush_wakes()
+    assert eng.registry.get("A").status == LOST, eng.registry.get("A").status
+    assert eng.registry.get("B").status == ACTIVE, eng.registry.get("B").status
+    assert store.stats["quarantined"] == 1 and store.stats["wake_retries"] == 2, store.stats
+    # round 2: the prefetch worker dies mid-promotion; supervision must fail
+    # the ticket (B stays HIBERNATED, re-wakeable), respawn, then succeed
+    eng.hibernate("B")
+    eng.wake("B")
+    eng.run(4)
+    eng.flush_wakes()
+    assert eng.registry.get("B").status == HIBERNATED, eng.registry.get("B").status
+    assert eng.stats["wake_failures"] >= 1 and store.stats["worker_respawns"] == 1
+    eng.wake("B", wait=True)
+    eng.run(4)
+    eng.flush_wakes()
+    assert eng.registry.get("B").status == ACTIVE
+    # the control lane never noticed any of it: bitwise parity at tick 32
+    assert eng.stats["ticks"] == 32, eng.stats["ticks"]
+    chaos_c = next(m for m in eng.mains if m.agent_id == "C").text
+    assert chaos_c == ref_c, (chaos_c[:60], ref_c[:60])
+    assert eng.stats["lost_agents"] == 1 and eng.stats["wakes"] == 2
+
+    out = {
+        "faults": faults.report(),
+        "store_stats": dict(store.stats),
+        "engine_stats": {k: eng.stats[k] for k in
+                         ("ticks", "hibernates", "wakes", "wake_failures",
+                          "lost_agents", "host_syncs", "macro_dispatches")},
+        "agents": eng.registry.counts(),
+        "control_parity": True,
+    }
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    with open("benchmarks/artifacts/chaos_report.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print("smoke,ok,chaos: transient faults retried, permanent loss degraded, "
+          "control lane bitwise")
+    return out
+
+
 def main() -> None:
     from benchmarks import bench_kernels, bench_synapse_quality, bench_table1, bench_table2, bench_throughput
 
@@ -150,11 +243,17 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true", help="reduced CI pass; no baseline rewrite")
     ap.add_argument("--lane", action="store_true",
                     help="with --smoke: add the forced-8-device lane-mesh curve")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --smoke: run ONLY the fault-injection chaos "
+                         "smoke (writes benchmarks/artifacts/chaos_report.json)")
     args = ap.parse_args()
     if args.smoke:
-        smoke()
-        hibernate_smoke()
-        if args.lane:
-            lane_smoke()
+        if args.chaos:
+            chaos_smoke()
+        else:
+            smoke()
+            hibernate_smoke()
+            if args.lane:
+                lane_smoke()
     else:
         main()

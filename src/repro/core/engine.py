@@ -84,7 +84,15 @@ from repro.core.router import CortexRouter
 from repro.data.tokenizer import ByteTokenizer
 from repro.kernels.ops import ring_append
 from repro.launch.sharding import lane_gather, lane_scatter
-from repro.memory import ACTIVE, HIBERNATED, REGISTERED, AgentRegistry, SynapseStore
+from repro.memory import (
+    ACTIVE,
+    HIBERNATED,
+    LOST,
+    REGISTERED,
+    AgentRegistry,
+    SnapshotLostError,
+    SynapseStore,
+)
 from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
@@ -482,6 +490,29 @@ class AgentView:
     prompt_len: int = 0
 
 
+# the durable subset of AgentView: what crash recovery needs to rebuild the
+# host-side view of a hibernated agent (lane/active are rebuilt at wake)
+_VIEW_META_FIELDS = (
+    "agent_id", "kind", "parent_lane", "task", "text", "tokens",
+    "position", "steps", "prompt_len",
+)
+
+
+def _view_to_meta(view: "AgentView") -> dict:
+    out = {f: getattr(view, f) for f in _VIEW_META_FIELDS}
+    out["tokens"] = [int(t) for t in out["tokens"]]
+    return out
+
+
+def _view_from_meta(meta: dict) -> "AgentView":
+    view = AgentView(meta["agent_id"], -1, meta["kind"])
+    for f in _VIEW_META_FIELDS[2:]:
+        setattr(view, f, meta[f])
+    view.tokens = list(meta["tokens"])
+    view.active = False
+    return view
+
+
 class CortexEngine:
     def __init__(
         self,
@@ -506,6 +537,7 @@ class CortexEngine:
         mesh=None,
         store: SynapseStore | None = None,
         hibernate_idle_ticks: int | None = None,
+        wake_deadline_s: float | None = None,
     ):
         """``mesh``: a lane mesh (see ``launch.mesh.make_lane_mesh``) shards
         every side-lane TickState leaf over its ``lane`` axis and runs the
@@ -591,6 +623,10 @@ class CortexEngine:
         self.store = store if store is not None else SynapseStore()
         self.registry = AgentRegistry()
         self.hibernate_idle_ticks = hibernate_idle_ticks
+        # default promotion deadline (seconds) applied to every wake unless
+        # overridden per call — bounds how long a stuck prefetch can hold an
+        # agent in limbo before it degrades to a failed wake
+        self.wake_deadline_s = wake_deadline_s
         self._agent_seq = 0
         self._wake_tickets: dict[str, object] = {}
         self._pending_wakes: list[str] = []
@@ -613,6 +649,11 @@ class CortexEngine:
             "overlapped_drains": 0, "window_hist": {},
             # tiered-memory telemetry
             "hibernates": 0, "wakes": 0,
+            # resilience telemetry (ISSUE 8): wake_failures = transient
+            # (snapshot intact, agent stays HIBERNATED, retryable);
+            # lost_agents = permanent (snapshot unrecoverable, agent LOST);
+            # recoveries = hibernated agents re-adopted after a restart
+            "wake_failures": 0, "lost_agents": 0, "recoveries": 0,
         }
         self._pending = 0  # ticks since last drain (== device ring cursor)
 
@@ -1358,7 +1399,18 @@ class CortexEngine:
             self.state = dataclasses.replace(self.state, side_active=act_a)
             sp = self._side_sp[lane]
             self.sides[lane] = AgentView(f"side{lane}", lane, "side")
-        self.store.put(agent_id, snap)  # device_get inside: the one sync
+        # durable bookkeeping rides the snapshot into the store (and, on
+        # demotion, into the cold blob's frame metadata): everything needed
+        # to re-adopt this agent after a process crash — the host-side view,
+        # sampling params, and the router's retained tag tail
+        meta = {
+            "kind": kind,
+            "view": _view_to_meta(view),
+            "sampling": dataclasses.asdict(sp),
+            "router": self.router.export_state(agent_id),
+            "hibernate_tick": self.stats["ticks"],
+        }
+        self.store.put(agent_id, snap, meta=meta)  # device_get inside: the one sync
         self.stats["aux_dispatches"] += 2
         self.stats["host_syncs"] += 1
         self.stats["hibernates"] += 1
@@ -1367,18 +1419,29 @@ class CortexEngine:
         self.prism.release(agent_id)
         self.history.append({"event": "hibernate", "agent": agent_id, "kind": kind})
 
-    def wake(self, agent_id: str, *, wait: bool = False):
+    def wake(self, agent_id: str, *, wait: bool = False,
+             deadline_s: float | None = None):
         """Promote a hibernated agent back toward a lane. Returns
         immediately after starting the async prefetch (a daemon thread pulls
         warm/cold bytes and lands them on device); the wake *commits* — the
         scatter into a free lane — at the next window boundary inside
         :meth:`run`, overlapping the in-flight window instead of flushing
-        the pipeline. ``wait=True`` blocks until the agent is live."""
+        the pipeline. ``wait=True`` blocks until the agent is live.
+
+        Failure semantics (ISSUE 8): transient prefetch failures retry with
+        backoff inside the store; ``deadline_s`` (default: the engine's
+        ``wake_deadline_s``) bounds the whole promotion. A wake that fails
+        with the snapshot intact leaves the agent HIBERNATED (re-wakeable,
+        counted in ``stats['wake_failures']``); permanent snapshot loss
+        marks it LOST, frees no lane, and the engine keeps ticking."""
         rec = self.registry.get(agent_id)
         if rec.status == ACTIVE:
             return (self.mains if rec.kind == "main" else self.sides)[rec.lane]
         if rec.status != HIBERNATED:
-            raise ValueError(f"agent {agent_id!r} has no hibernated context")
+            raise ValueError(
+                f"agent {agent_id!r} has no hibernated context "
+                f"(status={rec.status})"
+            )
         if agent_id not in self._wake_tickets:
             sharding = self._rep_sharding
 
@@ -1387,13 +1450,23 @@ class CortexEngine:
                 # so these explicit copies never trip the engine's guard
                 return jax.device_put(host, _s) if _s is not None else jax.device_put(host)
 
-            self._wake_tickets[agent_id] = self.store.prefetch(agent_id, put_fn)
+            self._wake_tickets[agent_id] = self.store.prefetch(
+                agent_id, put_fn,
+                deadline_s=self.wake_deadline_s if deadline_s is None else deadline_s,
+            )
             self._pending_wakes.append(agent_id)
         if wait:
             self.flush_wakes()
             rec = self.registry.get(agent_id)
             if rec.status != ACTIVE:
-                raise RuntimeError(f"wake of {agent_id!r} found no free lane")
+                if rec.status == LOST:
+                    raise SnapshotLostError(
+                        agent_id, "context permanently lost during wake"
+                    )
+                raise RuntimeError(
+                    f"wake of {agent_id!r} did not land "
+                    f"(status={rec.status}: lane-starved or wake failed)"
+                )
             return (self.mains if rec.kind == "main" else self.sides)[rec.lane]
         return rec
 
@@ -1411,18 +1484,54 @@ class CortexEngine:
         if not self._pending_wakes:
             return 0
         assert self._pending == 0, "wake commit must happen at a window boundary"
+        # supervision: a dead prefetch thread is detected here (its in-flight
+        # ticket fails instead of hanging a waiter) and respawned for the
+        # still-queued tickets
+        self.store.heal_worker()
         committed, still = 0, []
         for aid in self._pending_wakes:
             ticket = self._wake_tickets[aid]
-            if not (wait or ticket.ready()):
+            ticket.expire()  # host-side deadline: a stuck worker can't block this
+            if not ticket.failed() and not (wait or ticket.ready()):
                 still.append(aid)
                 continue
+            if wait and not ticket.ready():
+                try:
+                    ticket.result(timeout=ticket.remaining())
+                except Exception:
+                    pass  # terminal state is recorded on the ticket itself
+                ticket.expire()
+            if ticket.failed():
+                self._fail_wake(aid, ticket.error)
+                continue  # degraded, not pending: engine keeps ticking
             if self._commit_wake(aid, ticket, mark_fresh=mark_fresh):
                 committed += 1
             else:
                 still.append(aid)  # lane-starved: stays pending
         self._pending_wakes = still
         return committed
+
+    def _fail_wake(self, agent_id: str, err: BaseException | None) -> None:
+        """A wake ticket reached the terminal failed state. Degrade, never
+        crash: a KeyError-family failure (quarantined blob, vanished file,
+        dropped snapshot) means the context is unrecoverable — mark the
+        agent LOST and move on; anything else (deadline, dead worker,
+        exhausted transient retries) leaves the snapshot intact, so the
+        agent stays HIBERNATED and a later wake() may succeed."""
+        self._wake_tickets.pop(agent_id, None)
+        if isinstance(err, KeyError) or agent_id not in self.store:
+            self.registry.mark_lost(agent_id)
+            self.store.drop(agent_id)
+            self.router.reset(agent_id)
+            self.stats["lost_agents"] += 1
+            self.history.append(
+                {"event": "lost", "agent": agent_id, "error": repr(err)}
+            )
+        else:
+            self.stats["wake_failures"] += 1
+            self.history.append(
+                {"event": "wake_failed", "agent": agent_id, "error": repr(err)}
+            )
 
     def _commit_wake(self, agent_id: str, ticket, *, mark_fresh: bool = False) -> bool:
         rec = self.registry.get(agent_id)
@@ -1480,6 +1589,34 @@ class CortexEngine:
             self._fresh_wakes.add((kind, lane))
         self.history.append({"event": "wake", "agent": agent_id, "lane": lane})
         return True
+
+    def adopt_hibernated(self, *, kinds=("main", "side")) -> list[str]:
+        """Crash-recovery re-adoption (ISSUE 8): after ``store.recover()``
+        rebuilt the cold index from disk, re-register every snapshot whose
+        durable metadata names an agent this engine does not already hold,
+        restoring the host-side view, sampling params, and the router's
+        retained tag tail. Adopted agents come back HIBERNATED — a normal
+        :meth:`wake` makes them live, and their greedy streams replay
+        bitwise as if the process never died. Returns the adopted ids."""
+        adopted = []
+        for key in self.store.keys():
+            meta = self.store.meta_of(key)
+            if not isinstance(meta, dict) or meta.get("kind") not in kinds:
+                continue
+            if key in self.registry and self.registry.get(key).status in (
+                ACTIVE, HIBERNATED,
+            ):
+                continue  # a live identity wins over its stale snapshot
+            view = _view_from_meta(meta["view"])
+            sp = SamplingParams(**meta["sampling"])
+            self.registry.register(key, meta["kind"])
+            self.registry.hibernate(key, {"view": view, "sampling": sp})
+            if meta.get("router"):
+                self.router.restore_state(key, meta["router"])
+            self.stats["recoveries"] += 1
+            self.history.append({"event": "adopt", "agent": key})
+            adopted.append(key)
+        return adopted
 
     def _auto_hibernate(self) -> int:
         """Idle-ticks demotion policy: mains whose last control event

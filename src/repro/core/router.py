@@ -92,3 +92,16 @@ class CortexRouter:
     def reset(self, agent_id: str):
         self._scanned.pop(agent_id, None)
         self._tails.pop(agent_id, None)
+
+    def export_state(self, agent_id: str) -> dict | None:
+        """Plain-data snapshot of one agent's scan state (tail + offsets) —
+        persisted with its hibernation blob so crash recovery restores a
+        tag split across the hibernate boundary, not just the caches."""
+        if agent_id not in self._scanned and agent_id not in self._tails:
+            return None
+        tail, base = self._tails.get(agent_id, ("", 0))
+        return {"scanned": self._scanned.get(agent_id, 0), "tail": tail, "base": base}
+
+    def restore_state(self, agent_id: str, state: dict) -> None:
+        self._scanned[agent_id] = int(state.get("scanned", 0))
+        self._tails[agent_id] = (state.get("tail", ""), int(state.get("base", 0)))

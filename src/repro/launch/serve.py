@@ -3,6 +3,11 @@ multi-agent engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-0.5b --mode cortex
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --mode batch
+
+Crash recovery (ISSUE 8): point ``--cold-dir`` at a persistent directory
+and a later run with ``--recover`` rebuilds the cold tier from disk
+(integrity-checked; corrupt blobs quarantined) and re-adopts the agents it
+finds — their streams continue bitwise where the dead process stopped.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ from repro.configs import get_config, list_archs
 from repro.core.engine import CortexEngine
 from repro.core.prism import Prism
 from repro.data.tokenizer import ByteTokenizer
+from repro.memory import SynapseStore
 from repro.models import model as model_lib
 from repro.serving.sampler import SamplingParams
 from repro.serving.server import BatchServer
@@ -27,24 +33,44 @@ def main():
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--prompt", default="Question: what makes this system scale? [TASK: verify memory math] Answer:")
     ap.add_argument("--ticks", type=int, default=30)
+    ap.add_argument("--cold-dir", default=None,
+                    help="directory for the cold (disk) tier; enables --recover")
+    ap.add_argument("--recover", action="store_true",
+                    help="rebuild the cold tier from --cold-dir and re-adopt "
+                         "the hibernated agents found there before serving")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = model_lib.init_params(jax.random.key(0), cfg)
     tok = ByteTokenizer(cfg.vocab_size)
+    store = SynapseStore(cold_dir=args.cold_dir) if args.cold_dir else None
 
     if args.mode == "batch":
         server = BatchServer(params, cfg, tok, n_lanes=4, capacity=512,
-                             sampling=SamplingParams(temperature=0.9))
+                             sampling=SamplingParams(temperature=0.9),
+                             **({"store": store} if store else {}))
         server.submit(args.prompt, max_new_tokens=32)
         for r in server.run_until_done():
-            print(f"[{r.rid}] {r.text!r}")
+            print(f"[{r.rid}] {r.text!r}" + (f"  ERROR: {r.error}" if r.error else ""))
         return
 
     prism = Prism(params, cfg)
     engine = CortexEngine(prism, tok, n_main=1, max_side=4, main_capacity=512,
                           side_max_steps=12, theta=-1.0,
-                          sampling=SamplingParams(temperature=1.0))
+                          sampling=SamplingParams(temperature=1.0),
+                          **({"store": store} if store else {}))
+    if args.recover:
+        if not args.cold_dir:
+            ap.error("--recover requires --cold-dir")
+        rec_report = engine.store.recover(args.cold_dir)
+        adopted = engine.adopt_hibernated()
+        print(f"recover: {len(rec_report['recovered'])} cold entries rebuilt "
+              f"({len(rec_report['orphans_adopted'])} orphan blobs), "
+              f"{len(rec_report['quarantined'])} quarantined, "
+              f"{len(rec_report['lost'])} lost; "
+              f"{len(adopted)} agents re-adopted: {adopted}")
+        for aid in adopted:
+            engine.wake(aid)
     engine.submit(args.prompt)
     engine.run(args.ticks)
     print("events:", *engine.history, sep="\n  ")
@@ -56,7 +82,18 @@ def main():
           f"warm {tiers['warm_bytes']/1e6:.2f}MB (host, {tiers['n_warm']} agents) | "
           f"cold {tiers['cold_bytes']/1e6:.2f}MB (disk, {tiers['n_cold']} agents)")
     print(f"agents: {agents['registered']} registered, {agents['active']} active, "
-          f"{agents['hibernated']} hibernated")
+          f"{agents['hibernated']} hibernated, {agents['lost']} lost")
+    # resilience counters (ISSUE 8): all zeros on a healthy run — nonzero
+    # values are the memory hierarchy degrading instead of crashing
+    srep = engine.store.report()
+    print(f"faults: {srep['stat_quarantined']} quarantined, "
+          f"{srep['stat_wake_retries']} wake retries, "
+          f"{srep['stat_recovered']} recovered, "
+          f"{srep['stat_prefetch_errors']} prefetch errors, "
+          f"{srep['stat_worker_respawns']} worker respawns; "
+          f"engine: {engine.stats['wake_failures']} wake failures, "
+          f"{engine.stats['lost_agents']} lost, "
+          f"{engine.stats['recoveries']} recoveries")
 
 
 if __name__ == "__main__":

@@ -2,18 +2,40 @@
 
 `SynapseStore` holds hibernated agents' cache snapshots; `AgentRegistry`
 owns agent identity independent of lane slots, so engines and servers can
-register far more agents than they have live lanes.
+register far more agents than they have live lanes. The cold tier is
+integrity-checked and crash-recoverable (see `store` and `checkpoint.io`);
+`faults.FaultInjector` drives the resilience test suite.
 """
-from .registry import ACTIVE, HIBERNATED, REGISTERED, AgentRecord, AgentRegistry
-from .store import COLD, WARM, SynapseStore, WakeTicket
+from .faults import FaultInjector, WorkerKill
+from .registry import (
+    ACTIVE,
+    HIBERNATED,
+    LOST,
+    REGISTERED,
+    AgentRecord,
+    AgentRegistry,
+)
+from .store import (
+    COLD,
+    WARM,
+    SnapshotLostError,
+    SynapseStore,
+    WakeTicket,
+    WorkerDiedError,
+)
 
 __all__ = [
     "AgentRecord",
     "AgentRegistry",
+    "FaultInjector",
+    "SnapshotLostError",
     "SynapseStore",
     "WakeTicket",
+    "WorkerDiedError",
+    "WorkerKill",
     "ACTIVE",
     "HIBERNATED",
+    "LOST",
     "REGISTERED",
     "WARM",
     "COLD",

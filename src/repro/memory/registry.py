@@ -20,6 +20,7 @@ from typing import Any, Dict, Iterable, List, Optional
 REGISTERED = "registered"  # known, but holds no context (never ran / overwritten)
 ACTIVE = "active"          # bound to a live lane on device
 HIBERNATED = "hibernated"  # context parked in the SynapseStore (warm/cold)
+LOST = "lost"              # context permanently unrecoverable (corrupt/missing blob)
 
 
 @dataclass
@@ -82,6 +83,17 @@ class AgentRegistry:
         if rec is not None:
             rec.status, rec.lane, rec.saved = REGISTERED, -1, None
 
+    def mark_lost(self, agent_id: str) -> Optional[AgentRecord]:
+        """Terminal degradation: the agent's parked context is permanently
+        unrecoverable (quarantined blob, vanished file). Identity is kept —
+        callers can observe what was lost and why — but the record holds no
+        lane and no saved state; only a fresh ``submit`` revives the id."""
+        rec = self._records.get(agent_id)
+        if rec is not None:
+            rec.status, rec.lane, rec.saved = LOST, -1, None
+            rec.last_event = self.tick()
+        return rec
+
     # -- queries ----------------------------------------------------------
     def with_status(self, status: str, kind: Optional[str] = None) -> List[AgentRecord]:
         return [
@@ -105,7 +117,7 @@ class AgentRegistry:
         return min(cands, key=lambda r: r.last_event) if cands else None
 
     def counts(self) -> Dict[str, int]:
-        by = {REGISTERED: 0, ACTIVE: 0, HIBERNATED: 0}
+        by = {REGISTERED: 0, ACTIVE: 0, HIBERNATED: 0, LOST: 0}
         for r in self._records.values():
             by[r.status] += 1
         total = len(self._records)
@@ -113,5 +125,6 @@ class AgentRegistry:
             "registered": total,
             "active": by[ACTIVE],
             "hibernated": by[HIBERNATED],
+            "lost": by[LOST],
             "dormant": total - by[ACTIVE],
         }

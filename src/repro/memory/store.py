@@ -7,14 +7,15 @@ Tiers (paper §"million-agent capacity"; cache-hierarchy treatment per
   stored here; the store only sees agents once they leave the device.
 * **warm** — host RAM: the agent's landmark-compressed cache slice plus
   per-lane scalars, as a numpy pytree (exact device bytes, no re-encode).
-* **cold** — disk: the same pytree through the `checkpoint/io` codec
-  (msgpack + zstd), one blob per agent; only a ShapeDtypeStruct skeleton
-  stays in RAM so a million cold agents cost ~nothing on the host.
+* **cold** — disk: the same pytree through the `checkpoint/io` FRAMED codec
+  (magic + version + checksummed zstd/zlib payload), one blob per agent;
+  only a ShapeDtypeStruct skeleton stays in RAM so a million cold agents
+  cost ~nothing on the host.
 
 Demotion warm→cold is LRU, triggered when `warm_capacity_bytes` is
-exceeded (and on explicit `demote()`); it needs the optional `zstandard`
-dep — without it (or without a `cold_dir`) entries simply stay warm and
-the skip is counted in the report rather than raised mid-run.
+exceeded (and on explicit `demote()`); without a `cold_dir` entries simply
+stay warm and the skip is counted in the report rather than raised mid-run.
+(`zstandard` is optional: the framed codec falls back to stdlib zlib.)
 
 Promotion is asynchronous: `prefetch()` hands back a `WakeTicket` and a
 daemon worker thread reads the blob / host pytree and (optionally) lands
@@ -24,14 +25,37 @@ so the worker's explicit transfers never trip the engine's "no transfers
 in the overlap region" invariant — the engine only *commits* the already
 device-resident buffers at a window boundary.
 
+Resilience contract (ISSUE 8) — the hierarchy must degrade, never crash:
+
+* every cold read verifies the frame checksum; a corrupt/truncated blob is
+  moved into ``cold_dir/quarantine/`` and surfaces as a typed
+  :class:`SnapshotLostError` (a ``KeyError`` subclass), never a raw codec
+  exception mid-wake;
+* the cold index is mirrored in an atomic on-disk manifest and every blob
+  embeds its own key/skeleton/bookkeeping in the frame metadata, so
+  :meth:`recover` rebuilds the tier — skeletons included — after a process
+  restart (manifest-first, then orphan blobs from a crash mid-demotion);
+* `prefetch()` retries transient I/O (``OSError``) with bounded
+  exponential backoff; tickets carry an optional deadline and a terminal
+  *failed* state; :meth:`heal_worker` detects a dead worker thread, fails
+  its in-flight ticket (instead of hanging the waiter forever) and
+  respawns the thread;
+* a :class:`repro.memory.faults.FaultInjector` can be attached (``faults=``)
+  to deterministically inject torn writes, bit flips, failed reads, slow
+  ``put_fn`` and worker death at the exact I/O boundaries production code
+  uses — the resilience suite and the chaos smoke drive it.
+
 Snapshots are stored bitwise: a wake must reproduce the exact greedy
 stream of a lane that never hibernated, so nothing here may re-quantize.
 """
 from __future__ import annotations
 
 import os
+import pickle
 import queue
 import threading
+import time
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -42,6 +66,26 @@ from ..core.prism import tree_bytes
 
 WARM = "warm"
 COLD = "cold"
+
+BLOB_SUFFIX = ".synapse.blob"
+MANIFEST_NAME = "MANIFEST.pkl"
+QUARANTINE_DIR = "quarantine"
+MANIFEST_VERSION = 1
+
+
+class SnapshotLostError(KeyError):
+    """A snapshot that the index believed existed is permanently gone
+    (corrupt/truncated blob quarantined, or its file vanished while still
+    indexed). Subclasses ``KeyError`` so legacy callers that treated every
+    miss as a key error keep working; new callers can tell loss (was there,
+    now unrecoverable) from a plain miss (never there / already dropped)."""
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep messages readable
+        return ": ".join(str(a) for a in self.args)
+
+
+class WorkerDiedError(RuntimeError):
+    """The prefetch worker thread died while this ticket was in flight."""
 
 
 def _host_tree(tree):
@@ -56,25 +100,89 @@ def _skeleton(tree):
     )
 
 
-class WakeTicket:
-    """Handle for an in-flight asynchronous promotion (wake prefetch)."""
+@dataclass
+class ColdEntry:
+    """RAM-side record of one cold blob (the blob itself is on disk)."""
 
-    def __init__(self, key: str):
+    path: str
+    skeleton: Any          # ShapeDtypeStruct pytree (decode template)
+    comp_bytes: int        # framed file size on disk
+    raw_bytes: int         # uncompressed snapshot bytes (accounting)
+    meta: Optional[dict] = None  # caller bookkeeping (engine: view/sampling)
+
+
+class WakeTicket:
+    """Handle for an in-flight asynchronous promotion (wake prefetch).
+
+    Terminal states are *ready* (``result()`` returns the value) and
+    *failed* (``result()`` raises the stored error). Transitions are
+    first-wins: a worker resolving a ticket the host already expired — or
+    vice versa — is a no-op, so a blocked worker can be abandoned safely
+    and finish into the void."""
+
+    def __init__(self, key: str, *, deadline: Optional[float] = None):
         self.key = key
+        self.deadline = deadline  # absolute time.monotonic() timestamp
         self._done = threading.Event()
+        self._lock = threading.Lock()
         self._value: Any = None
         self._error: Optional[BaseException] = None
 
-    def _resolve(self, value: Any) -> None:
-        self._value = value
-        self._done.set()
+    def _resolve(self, value: Any) -> bool:
+        with self._lock:
+            if self._done.is_set():
+                return False
+            self._value = value
+            self._done.set()
+            return True
 
-    def _fail(self, err: BaseException) -> None:
-        self._error = err
-        self._done.set()
+    def _fail(self, err: BaseException) -> bool:
+        with self._lock:
+            if self._done.is_set():
+                return False
+            self._error = err
+            self._done.set()
+            return True
 
+    # -- state queries -----------------------------------------------------
     def ready(self) -> bool:
+        """Terminal (resolved OR failed) — 'nothing left to wait for'."""
         return self._done.is_set()
+
+    def failed(self) -> bool:
+        return self._done.is_set() and self._error is not None
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._error
+
+    @property
+    def state(self) -> str:
+        if not self._done.is_set():
+            return "pending"
+        return "failed" if self._error is not None else "ready"
+
+    # -- deadlines ---------------------------------------------------------
+    def remaining(self, now: Optional[float] = None) -> Optional[float]:
+        if self.deadline is None:
+            return None
+        return max(0.0, self.deadline - (time.monotonic() if now is None else now))
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        return (
+            self.deadline is not None
+            and (time.monotonic() if now is None else now) >= self.deadline
+        )
+
+    def expire(self, now: Optional[float] = None) -> bool:
+        """Host-side deadline enforcement: fail the ticket if its deadline
+        passed and no terminal state was reached (e.g. the worker is stuck
+        in a blocked ``put_fn``). Returns True if THIS call failed it."""
+        if not self.expired(now) or self._done.is_set():
+            return False
+        return self._fail(
+            TimeoutError(f"wake deadline exceeded for {self.key!r}")
+        )
 
     def result(self, timeout: Optional[float] = None) -> Any:
         if not self._done.wait(timeout):
@@ -85,7 +193,7 @@ class WakeTicket:
 
 
 class SynapseStore:
-    """Warm (host RAM) + cold (zstd disk) storage for hibernated agents."""
+    """Warm (host RAM) + cold (framed disk) storage for hibernated agents."""
 
     def __init__(
         self,
@@ -93,34 +201,61 @@ class SynapseStore:
         warm_capacity_bytes: Optional[int] = None,
         cold_dir: Optional[str] = None,
         cold_level: int = 3,
+        wake_retries: int = 3,
+        wake_backoff_s: float = 0.02,
+        wake_backoff_cap_s: float = 1.0,
+        faults=None,
     ):
         self.warm_capacity_bytes = warm_capacity_bytes
         self.cold_dir = cold_dir
         self.cold_level = cold_level
+        self.wake_retries = wake_retries
+        self.wake_backoff_s = wake_backoff_s
+        self.wake_backoff_cap_s = wake_backoff_cap_s
+        self.faults = faults  # FaultInjector | None — test/chaos hook
         self._lock = threading.RLock()
         # key -> numpy pytree; insertion order doubles as LRU order
         self._warm: Dict[str, Any] = {}
         self._warm_bytes: Dict[str, int] = {}
-        # key -> (path, skeleton, compressed_bytes, raw_bytes)
-        self._cold: Dict[str, tuple] = {}
+        self._warm_meta: Dict[str, Optional[dict]] = {}
+        self._cold: Dict[str, ColdEntry] = {}
         self.stats = {
             "puts": 0,
             "demotions": 0,
             "demotions_skipped": 0,
             "prefetches": 0,
             "cold_reads": 0,
+            # resilience telemetry (ISSUE 8)
+            "quarantined": 0,      # corrupt/truncated blobs moved aside
+            "lost": 0,             # indexed snapshots found unrecoverable
+            "wake_retries": 0,     # transient read failures retried
+            "prefetch_errors": 0,  # tickets that ended in the failed state
+            "worker_respawns": 0,  # dead prefetch threads resurrected
+            "recovered": 0,        # cold entries rebuilt by recover()
         }
         self._work: "queue.SimpleQueue" = queue.SimpleQueue()
         self._worker: Optional[threading.Thread] = None
+        self._inflight: Optional[WakeTicket] = None  # ticket the worker holds
 
     # -- tier plumbing ----------------------------------------------------
     @property
     def cold_enabled(self) -> bool:
-        return self.cold_dir is not None and ckpt_io.zstandard is not None
+        # the framed codec falls back to zlib, so a cold_dir alone is enough
+        return self.cold_dir is not None
 
     def _cold_path(self, key: str) -> str:
+        import zlib as _zlib
+
         safe = "".join(c if (c.isalnum() or c in "._-") else "_" for c in key)
-        return os.path.join(self.cold_dir, f"{safe}.synapse.zst")
+        # the crc suffix keeps two keys that mangle identically ("a b" vs
+        # "a_b") from silently sharing one blob file
+        tag = _zlib.crc32(key.encode()) & 0xFFFFFFFF
+        return os.path.join(self.cold_dir, f"{safe}-{tag:08x}{BLOB_SUFFIX}")
+
+    def quarantine_dir(self) -> Optional[str]:
+        if self.cold_dir is None:
+            return None
+        return os.path.join(self.cold_dir, QUARANTINE_DIR)
 
     def warm_bytes(self) -> int:
         with self._lock:
@@ -142,23 +277,40 @@ class SynapseStore:
                 return COLD
             return None
 
+    def meta_of(self, key: str) -> Optional[dict]:
+        """Caller bookkeeping attached at put() time (survives demotion and
+        :meth:`recover` — it rides the blob's frame metadata)."""
+        with self._lock:
+            if key in self._warm:
+                return self._warm_meta.get(key)
+            entry = self._cold.get(key)
+            return entry.meta if entry is not None else None
+
     # -- demotion (device -> warm -> cold) --------------------------------
-    def put(self, key: str, tree) -> None:
+    def put(self, key: str, tree, meta: Optional[dict] = None) -> None:
         """Park a snapshot in the warm tier (demoting LRU entries to cold
-        if over capacity). `tree` may hold device or numpy leaves."""
+        if over capacity). `tree` may hold device or numpy leaves. ``meta``
+        is small picklable bookkeeping (agent kind/view/sampling) persisted
+        with the blob so a crashed process can re-adopt the agent."""
         host = _host_tree(tree)
         with self._lock:
             stale = self._cold.pop(key, None)
             self._warm.pop(key, None)  # re-put refreshes LRU position
             self._warm[key] = host
             self._warm_bytes[key] = tree_bytes(host)
+            self._warm_meta[key] = meta
             self.stats["puts"] += 1
+            if stale is not None:
+                # superseded cold blob must not leak on disk. Unlinked under
+                # the lock: demotion recreates the SAME path, so an unlocked
+                # stale unlink could race a concurrent re-demotion and delete
+                # the fresh blob out from under the index.
+                try:
+                    os.remove(stale.path)
+                except OSError:
+                    pass
+                self._write_manifest_locked()
             self._enforce_capacity_locked()
-        if stale is not None:  # superseded cold blob must not leak on disk
-            try:
-                os.remove(stale[0])
-            except OSError:
-                pass
 
     def _enforce_capacity_locked(self) -> None:
         if self.warm_capacity_bytes is None:
@@ -185,89 +337,395 @@ class SynapseStore:
         if key not in self._warm or not self.cold_enabled:
             return False
         host = self._warm[key]
-        blob = ckpt_io.dumps(host, level=self.cold_level)
+        raw = self._warm_bytes[key]
+        meta = self._warm_meta.get(key)
+        skel = _skeleton(host)
+        # the blob is self-describing: key + skeleton + bookkeeping ride the
+        # checksummed frame metadata, so recover() can re-adopt an orphan
+        # blob whose manifest entry never landed (crash mid-demotion)
+        frame_meta = pickle.dumps(
+            {"key": key, "skeleton": skel, "meta": meta, "raw": raw},
+            protocol=pickle.HIGHEST_PROTOCOL,
+        )
+        blob = ckpt_io.dumps_framed(host, level=self.cold_level, meta=frame_meta)
+        if self.faults is not None:
+            blob = self.faults.on_cold_write(key, blob)  # torn-write injection
         os.makedirs(self.cold_dir, exist_ok=True)
         path = self._cold_path(key)
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(blob)
         os.replace(tmp, path)
-        raw = self._warm_bytes[key]
-        self._cold[key] = (path, _skeleton(host), len(blob), raw)
+        self._cold[key] = ColdEntry(path, skel, len(blob), raw, meta)
         del self._warm[key]
         del self._warm_bytes[key]
+        self._warm_meta.pop(key, None)
         self.stats["demotions"] += 1
+        self._write_manifest_locked()
         return True
 
+    # -- manifest + recovery (ISSUE 8) ------------------------------------
+    def _manifest_path(self) -> str:
+        return os.path.join(self.cold_dir, MANIFEST_NAME)
+
+    def _write_manifest_locked(self) -> None:
+        """Atomically mirror the cold index to disk. The manifest is the
+        authoritative key->file map (collision-proof vs filename mangling)
+        and the fast path for :meth:`recover`; blobs stay self-describing
+        as the fallback."""
+        if self.cold_dir is None:
+            return
+        os.makedirs(self.cold_dir, exist_ok=True)
+        entries = {
+            key: {
+                "file": os.path.basename(e.path),
+                "comp": e.comp_bytes,
+                "raw": e.raw_bytes,
+            }
+            for key, e in self._cold.items()
+        }
+        payload = pickle.dumps(
+            {"version": MANIFEST_VERSION, "entries": entries},
+            protocol=pickle.HIGHEST_PROTOCOL,
+        )
+        tmp = self._manifest_path() + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, self._manifest_path())
+
+    def _load_manifest(self) -> dict:
+        try:
+            with open(self._manifest_path(), "rb") as f:
+                data = pickle.loads(f.read())
+            if data.get("version") != MANIFEST_VERSION:
+                return {"entries": {}}
+            return data
+        except FileNotFoundError:
+            return {"entries": {}}
+        except Exception:
+            # a torn manifest write never happened (atomic replace), but a
+            # corrupted file must not block recovery: blobs self-describe
+            return {"entries": {}, "corrupt": True}
+
+    def recover(self, cold_dir: Optional[str] = None, *,
+                verify_payloads: bool = False) -> dict:
+        """Rebuild the cold index (skeletons included) from disk after a
+        process restart. Manifest entries are adopted first; blob files the
+        manifest does not know about (a crash between the blob write and
+        the manifest write) are adopted from their embedded frame metadata.
+        Unreadable/corrupt blobs are quarantined, manifest entries whose
+        file vanished are counted lost — recovery itself never raises on
+        bad data. ``verify_payloads=True`` additionally checks every
+        payload digest up front (reads every blob fully)."""
+        if cold_dir is not None:
+            self.cold_dir = cold_dir
+        report = {
+            "recovered": [], "quarantined": [], "lost": [],
+            "orphans_adopted": [], "manifest_corrupt": False,
+        }
+        if self.cold_dir is None or not os.path.isdir(self.cold_dir):
+            return report
+        manifest = self._load_manifest()
+        report["manifest_corrupt"] = bool(manifest.get("corrupt"))
+        seen_files = set()
+        for key, ent in manifest.get("entries", {}).items():
+            fname = ent.get("file", "")
+            seen_files.add(fname)
+            path = os.path.join(self.cold_dir, fname)
+            if not os.path.exists(path):
+                report["lost"].append(key)
+                with self._lock:
+                    self.stats["lost"] += 1
+                continue
+            self._adopt_blob(path, report, verify=verify_payloads)
+        # orphan blobs: written, crashed before their manifest update
+        try:
+            listing = sorted(os.listdir(self.cold_dir))
+        except OSError:
+            listing = []
+        for fname in listing:
+            if not fname.endswith(BLOB_SUFFIX) or fname in seen_files:
+                continue
+            adopted = self._adopt_blob(
+                os.path.join(self.cold_dir, fname), report, verify=verify_payloads
+            )
+            if adopted is not None:
+                report["orphans_adopted"].append(adopted)
+        with self._lock:
+            self.stats["recovered"] += len(report["recovered"])
+            self._write_manifest_locked()
+        return report
+
+    def _adopt_blob(self, path: str, report: dict, *, verify: bool) -> Optional[str]:
+        """Validate one blob file and (re)index it; quarantine on any
+        integrity failure. Returns the adopted key, or None."""
+        try:
+            meta_bytes = ckpt_io.read_frame_meta(path)
+            info = pickle.loads(meta_bytes)
+            key = info["key"]
+            skel, meta, raw = info["skeleton"], info.get("meta"), info["raw"]
+            if verify:
+                with open(path, "rb") as f:
+                    ckpt_io.unframe(f.read(), verify=True)
+        except FileNotFoundError:
+            report["lost"].append(os.path.basename(path))
+            with self._lock:
+                self.stats["lost"] += 1
+            return None
+        except Exception as e:  # CorruptBlobError, bad pickle, short file...
+            q = self._quarantine_file(path)
+            report["quarantined"].append(
+                {"file": os.path.basename(path), "reason": repr(e),
+                 "quarantined_to": q}
+            )
+            return None
+        with self._lock:
+            if key in self._warm or key in self._cold:
+                return None  # live state wins over a stale on-disk copy
+            self._cold[key] = ColdEntry(
+                path, skel, os.path.getsize(path), raw, meta
+            )
+        report["recovered"].append(key)
+        return key
+
+    def _quarantine_file(self, path: str) -> Optional[str]:
+        """Move a bad blob into ``cold_dir/quarantine/`` (never delete —
+        the bytes may matter for forensics). Returns the new path."""
+        qdir = self.quarantine_dir()
+        if qdir is None:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            with self._lock:
+                self.stats["quarantined"] += 1
+            return None
+        try:
+            os.makedirs(qdir, exist_ok=True)
+            dest = os.path.join(qdir, os.path.basename(path))
+            os.replace(path, dest)
+        except OSError:
+            dest = None
+        with self._lock:
+            self.stats["quarantined"] += 1
+        return dest
+
     # -- promotion (cold/warm -> host pytree -> device) -------------------
-    def get_host(self, key: str):
+    def _read_cold_blob(self, key: str, path: str) -> bytes:
+        with open(path, "rb") as f:
+            data = f.read()
+        if self.faults is not None:
+            data = self.faults.on_cold_read(key, data)  # may raise / mutate
+        return data
+
+    def get_host(self, key: str, *, verify: bool = True):
         """Synchronously read a snapshot back as a numpy pytree (no tier
-        mutation — the entry stays parked until `drop()`)."""
+        mutation — the entry stays parked until `drop()`).
+
+        Every cold read verifies the blob's frame checksum (``verify=False``
+        is the bench's overhead-measurement arm only). A corrupt or
+        truncated blob is quarantined and surfaces as
+        :class:`SnapshotLostError`; a concurrent ``drop()``/re-``put()``
+        that unlinks the file mid-read resolves to the CURRENT state of the
+        key (warm copy, or a clean ``KeyError``) instead of leaking
+        ``FileNotFoundError``."""
         with self._lock:
             if key in self._warm:
                 return self._warm[key]
             if key in self._cold:
-                path, skel, _, _ = self._cold[key]
+                entry = self._cold[key]
             else:
                 raise KeyError(f"no hibernated snapshot for {key!r}")
-        with open(path, "rb") as f:
-            blob = f.read()
+        try:
+            blob = self._read_cold_blob(key, entry.path)
+        except FileNotFoundError:
+            return self._resolve_vanished(key, entry)
+        with self._lock:
+            cur = self._cold.get(key)
+            if cur is not entry:
+                # raced a re-put/drop while reading: the bytes we hold are
+                # stale — defer to whatever the key is NOW
+                if key in self._warm:
+                    return self._warm[key]
+                if cur is None:
+                    raise KeyError(f"no hibernated snapshot for {key!r}")
+                entry = cur  # re-demoted: fall through and decode fresh index
+        try:
+            tree = ckpt_io.loads_framed(blob, entry.skeleton, numpy=True, verify=verify)
+        except ckpt_io.CorruptBlobError as e:
+            with self._lock:
+                if self._cold.get(key) is entry:
+                    del self._cold[key]
+                    self.stats["lost"] += 1
+                    self._write_manifest_locked()
+            self._quarantine_file(entry.path)
+            raise SnapshotLostError(
+                key, f"cold blob failed integrity check ({e}); quarantined"
+            ) from e
         with self._lock:
             self.stats["cold_reads"] += 1
-        return ckpt_io.loads(blob, skel, numpy=True)
+        return tree
+
+    def _resolve_vanished(self, key: str, entry: ColdEntry):
+        """The blob file disappeared mid-read. A concurrent drop/re-put is
+        benign (the key's CURRENT state answers); a file missing while the
+        index still points at it is permanent loss."""
+        with self._lock:
+            if key in self._warm:
+                return self._warm[key]
+            cur = self._cold.get(key)
+            if cur is None:
+                raise KeyError(f"no hibernated snapshot for {key!r}")
+            if cur is entry:
+                del self._cold[key]
+                self.stats["lost"] += 1
+                self._write_manifest_locked()
+                raise SnapshotLostError(key, "cold blob file missing")
+        # the entry was replaced (re-demoted) while we read: try the new one
+        return self.get_host(key)
 
     def prefetch(
-        self, key: str, put_fn: Optional[Callable[[Any], Any]] = None
+        self,
+        key: str,
+        put_fn: Optional[Callable[[Any], Any]] = None,
+        *,
+        retries: Optional[int] = None,
+        backoff_s: Optional[float] = None,
+        deadline_s: Optional[float] = None,
     ) -> WakeTicket:
         """Kick off an async promotion; `put_fn` (if given) runs on the
         worker thread — pass `jax.device_put` with the target sharding so
-        the host->device copy overlaps the in-flight window."""
+        the host->device copy overlaps the in-flight window.
+
+        Transient I/O failures (``OSError``) retry up to ``retries`` times
+        with exponential backoff (``backoff_s * 2**attempt``, capped);
+        permanent failures — missing key, quarantined blob, exhausted
+        retries, a raising ``put_fn`` — land the ticket in the terminal
+        *failed* state, surfaced at ``result()`` / ``failed()``.
+        ``deadline_s`` bounds the whole promotion: an overdue ticket fails
+        with ``TimeoutError`` even if the worker is stuck."""
         if key not in self:
             raise KeyError(f"no hibernated snapshot for {key!r}")
-        ticket = WakeTicket(key)
+        deadline = None if deadline_s is None else time.monotonic() + deadline_s
+        ticket = WakeTicket(key, deadline=deadline)
         with self._lock:
             self.stats["prefetches"] += 1
         self._ensure_worker()
-        self._work.put((ticket, put_fn))
+        self._work.put((
+            ticket,
+            put_fn,
+            self.wake_retries if retries is None else retries,
+            self.wake_backoff_s if backoff_s is None else backoff_s,
+        ))
         return ticket
 
     def _ensure_worker(self) -> None:
-        if self._worker is None or not self._worker.is_alive():
-            self._worker = threading.Thread(
-                target=self._worker_loop, name="synapse-prefetch", daemon=True
-            )
-            self._worker.start()
+        with self._lock:
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(
+                    target=self._worker_loop, name="synapse-prefetch", daemon=True
+                )
+                self._worker.start()
+
+    def heal_worker(self) -> int:
+        """Supervision: if the prefetch worker thread died (an injected
+        ``BaseException``, a segfaulting extension, ...), fail the ticket it
+        was holding — its waiter must see a terminal state, not hang — and
+        respawn the thread so queued tickets keep draining. Returns the
+        number of tickets failed. Safe to call any time; a healthy worker
+        makes this a no-op."""
+        with self._lock:
+            worker, inflight = self._worker, self._inflight
+            if worker is None or worker.is_alive():
+                return 0
+            self._inflight = None
+            self.stats["worker_respawns"] += 1
+        failed = 0
+        if inflight is not None and not inflight.ready():
+            if inflight._fail(WorkerDiedError(
+                f"prefetch worker died while promoting {inflight.key!r}"
+            )):
+                failed += 1
+                with self._lock:
+                    self.stats["prefetch_errors"] += 1
+        self._ensure_worker()
+        return failed
 
     def _worker_loop(self) -> None:
         while True:
-            ticket, put_fn = self._work.get()
+            ticket, put_fn, retries, backoff = self._work.get()
+            with self._lock:
+                self._inflight = ticket
+            try:
+                self._run_prefetch(ticket, put_fn, retries, backoff)
+            except Exception as e:  # surfaced at ticket.result()/failed()
+                # NOT BaseException: KeyboardInterrupt/SystemExit must kill
+                # the thread (heal_worker resurrects it and fails the
+                # ticket) instead of being swallowed into a ticket error
+                if ticket._fail(e):
+                    with self._lock:
+                        self.stats["prefetch_errors"] += 1
+            with self._lock:
+                self._inflight = None
+
+    def _run_prefetch(self, ticket: WakeTicket, put_fn, retries: int,
+                      backoff: float) -> None:
+        attempt = 0
+        while True:
+            if ticket.ready():
+                return  # expired host-side while queued/retrying
+            if ticket.expire():
+                with self._lock:
+                    self.stats["prefetch_errors"] += 1
+                return
             try:
                 host = self.get_host(ticket.key)
+                if self.faults is not None and put_fn is not None:
+                    self.faults.on_put_fn(ticket.key)  # slow/blocked put
                 value = put_fn(host) if put_fn is not None else host
                 if put_fn is not None:
                     # force the copies to be enqueued/realized off-thread
                     jax.block_until_ready(value)
-                ticket._resolve(value)
-            except BaseException as e:  # surfaced at ticket.result()
-                ticket._fail(e)
+                if ticket._resolve(value):
+                    return
+                return  # lost the race to a host-side expiry
+            except KeyError:
+                raise  # SnapshotLostError / plain miss: permanent, no retry
+            except OSError:
+                attempt += 1
+                if attempt > retries:
+                    raise
+                with self._lock:
+                    self.stats["wake_retries"] += 1
+                delay = min(backoff * (2 ** (attempt - 1)), self.wake_backoff_cap_s)
+                if ticket.deadline is not None:
+                    rem = ticket.remaining()
+                    if rem is not None:
+                        delay = min(delay, rem)
+                time.sleep(delay)
 
     def drop(self, key: str) -> None:
         """Forget a snapshot (agent is hot again, or discarded)."""
         with self._lock:
             self._warm.pop(key, None)
             self._warm_bytes.pop(key, None)
+            self._warm_meta.pop(key, None)
             entry = self._cold.pop(key, None)
-        if entry is not None:
-            try:
-                os.remove(entry[0])
-            except OSError:
-                pass
+            if entry is not None:
+                # under the lock for the same reason as put(): a concurrent
+                # re-put could re-demote to the same path between our pop and
+                # an unlocked unlink, losing the new blob
+                try:
+                    os.remove(entry.path)
+                except OSError:
+                    pass
+                self._write_manifest_locked()
 
     # -- accounting -------------------------------------------------------
     def report(self) -> Dict[str, Any]:
         with self._lock:
-            cold_disk = sum(e[2] for e in self._cold.values())
-            cold_raw = sum(e[3] for e in self._cold.values())
+            cold_disk = sum(e.comp_bytes for e in self._cold.values())
+            cold_raw = sum(e.raw_bytes for e in self._cold.values())
             return {
                 "n_warm": len(self._warm),
                 "n_cold": len(self._cold),

@@ -54,6 +54,7 @@ class Request:
     done: bool = False
     lane: int = -1
     prompt_len: int = 0  # len(encode(prompt, bos=True)), set at admission
+    error: str | None = None  # terminal failure (lost parked snapshot, ...)
 
 
 class BatchServer:
@@ -110,7 +111,8 @@ class BatchServer:
         # composition changes — every admission/completion/cancel must
         # invalidate (see SampCache)
         self._samp_cache = SampCache()
-        self.stats = {"steps": 0, "overlapped": 0, "rollbacks": 0}
+        self.stats = {"steps": 0, "overlapped": 0, "rollbacks": 0,
+                      "lost_requests": 0}
 
         self._jit_prefill = jax.jit(
             lambda p, toks, c: model_lib.prefill(p, cfg, {"tokens": toks}, c, spec=self.spec)
@@ -175,7 +177,9 @@ class BatchServer:
                     ),
                     "position": np.int64(self.positions[lane]),
                 }
-                self.store.put(f"req{rid}", snap)  # host pull inside
+                self.store.put(
+                    f"req{rid}", snap, meta={"kind": "request", "rid": rid}
+                )  # host pull inside
                 self.lanes[lane] = None
                 req.lane = -1
                 self._samp_cache.invalidate()
@@ -183,10 +187,13 @@ class BatchServer:
                 return True
         return False
 
-    def unpark(self, rid: int) -> bool:
+    def unpark(self, rid: int, *, deadline_s: float | None = None) -> bool:
         """Start the async promotion of a parked request; it re-enters at
         the next admission boundary (before queued prompts — it already
-        paid its prefill)."""
+        paid its prefill). ``deadline_s`` bounds THIS request's promotion:
+        if the prefetch has not landed by then, the request fails with a
+        recorded error instead of stalling the admission loop (per-request
+        degradation — other streams are untouched)."""
         req = self.parked.pop(rid, None)
         if req is None:
             return False
@@ -195,17 +202,44 @@ class BatchServer:
         def put_fn(host, _s=rep):
             return jax.device_put(host, _s) if _s is not None else jax.device_put(host)
 
-        self._resume.append((req, self.store.prefetch(f"req{rid}", put_fn)))
+        self._resume.append(
+            (req, self.store.prefetch(f"req{rid}", put_fn, deadline_s=deadline_s))
+        )
         return True
+
+    def _fail_resume(self, req: Request, err: BaseException | None) -> None:
+        """Terminal per-request degradation: the parked snapshot could not
+        be promoted (quarantined blob, deadline, dead worker). The request
+        finishes with ``error`` set; every other stream keeps decoding."""
+        req.error = repr(err) if err is not None else "wake failed"
+        req.done = True
+        self.store.drop(f"req{req.rid}")
+        self.finished.append(req)
+        self.stats["lost_requests"] += 1
 
     def _admit_unparked(self, *, wait: bool = False):
         """Land resume tickets whose prefetched buffers are ready (all of
-        them with ``wait=True``) into free lanes."""
+        them with ``wait=True``) into free lanes. Failed tickets — loss,
+        deadline expiry, a dead prefetch worker (healed here) — retire
+        their request with ``error`` set instead of raising mid-admission."""
+        if self._resume:
+            self.store.heal_worker()
         still = []
         for req, ticket in self._resume:
-            lane = next((i for i, r in enumerate(self.lanes) if r is None), -1)
-            if lane < 0 or not (wait or ticket.ready()):
-                still.append((req, ticket))
+            ticket.expire()
+            if not ticket.failed():
+                lane = next((i for i, r in enumerate(self.lanes) if r is None), -1)
+                if lane < 0 or not (wait or ticket.ready()):
+                    still.append((req, ticket))
+                    continue
+                if not ticket.ready():
+                    try:
+                        ticket.result(timeout=ticket.remaining())
+                    except Exception:
+                        pass  # terminal state recorded on the ticket
+                    ticket.expire()
+            if ticket.failed():
+                self._fail_resume(req, ticket.error)
                 continue
             part = ticket.result()
             self.caches = jax.tree.map(
