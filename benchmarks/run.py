@@ -194,6 +194,38 @@ def chaos_smoke() -> dict:
     return out
 
 
+def serving_smoke() -> dict:
+    """CI gate for the serving front-end (ISSUE 9): the `serving` bench
+    section's key set must stay intact (TTFT + tick-latency percentiles,
+    per-tenant token shares, fairness counters), the 4:1 weighted tenants
+    must measure token shares within 10% of the weight ratio under
+    saturation, and no tenant may starve."""
+    from benchmarks import bench_serving
+
+    out = bench_serving.run(per_tenant=40, budget=8, ticks=60)
+    # key-set assertions: the section cannot silently rot
+    assert {"p50", "p99"} <= set(out["ttft_s"]), out["ttft_s"]
+    assert {"p50", "p99", "n"} <= set(out["tick_latency_s"])
+    assert out["tick_latency_s"]["n"] > 0
+    assert {"admission_rounds", "starvation_promotions",
+            "starvation_rounds"} <= set(out["fairness"])
+    for name, row in out["tenants"].items():
+        assert {"weight", "token_share", "expected_share", "admitted",
+                "rejected", "ttft_p50_s", "ttft_p99_s"} <= set(row), (name, row)
+    # fairness acceptance: 4:1 weights -> shares within 10%, nobody starves
+    for name, row in out["tenants"].items():
+        assert row["share_error"] <= 0.10, (name, row)
+        assert row["tokens_out"] > 0 and row["admitted"] > 0, (name, row)
+    assert out["completed"] > 0 and out["ttft_s"]["p50"] > 0
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    with open("benchmarks/artifacts/bench_serving_smoke.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    shares = {n: round(r["token_share"], 3) for n, r in out["tenants"].items()}
+    print(f"smoke,ok,serving: weighted-fair shares {shares} within 10%; "
+          "TTFT/tick-latency/fairness keys intact")
+    return out
+
+
 def main() -> None:
     from benchmarks import bench_kernels, bench_synapse_quality, bench_table1, bench_table2, bench_throughput
 
@@ -232,6 +264,12 @@ def main() -> None:
             throughput["hibernate"] = bench_hibernate.run()
         except Exception as e:
             print(f"hibernate,0,FAILED:{type(e).__name__}:{e}")
+        try:
+            from benchmarks import bench_serving
+
+            throughput["serving"] = bench_serving.run()
+        except Exception as e:
+            print(f"serving,0,FAILED:{type(e).__name__}:{e}")
         with open(os.path.join(ROOT, "BENCH_throughput.json"), "w") as f:
             json.dump(throughput, f, indent=1, default=str)
 
@@ -246,13 +284,19 @@ if __name__ == "__main__":
     ap.add_argument("--chaos", action="store_true",
                     help="with --smoke: run ONLY the fault-injection chaos "
                          "smoke (writes benchmarks/artifacts/chaos_report.json)")
+    ap.add_argument("--serving", action="store_true",
+                    help="with --smoke: run ONLY the serving front-end smoke "
+                         "(weighted-fair shares + SLO key set)")
     args = ap.parse_args()
     if args.smoke:
         if args.chaos:
             chaos_smoke()
+        elif args.serving:
+            serving_smoke()
         else:
             smoke()
             hibernate_smoke()
+            serving_smoke()
             if args.lane:
                 lane_smoke()
     else:

@@ -639,6 +639,20 @@ class CortexEngine:
         # skip the argmax select when none is greedy) without device reads
         self._main_sp: list[SamplingParams] = [self.sampling] * n_main
         self._side_sp: list[SamplingParams] = [self.side_sampling] * max_side
+        # per-agent stateful UTF-8 decoders (ISSUE 9 bugfix): drain chunks
+        # decode incrementally, so a codepoint split across a window
+        # boundary never becomes U+FFFD in the agent's `text`. Keyed by
+        # agent_id — the state survives hibernate/wake in-process, and its
+        # pending bytes ride the hibernation metadata for crash recovery.
+        self._decoders: dict[str, object] = {}
+        # serving front-end hooks (ISSUE 9): ``stream_tap(view, chunk,
+        # toks)`` fires during drain post-processing for every lane that
+        # received tokens (chunks are incremental-decoder output — their
+        # concatenation is the bitwise text stream); ``admission_hook`` runs
+        # with the window-boundary control plane in :meth:`_boundary_ops`,
+        # so front-end admissions never flush a pipelined window.
+        self.stream_tap = None
+        self.admission_hook = None
         self.history: list[dict] = []
         self.stats = {
             "ticks": 0, "tick_dispatches": 0, "macro_dispatches": 0,
@@ -813,6 +827,30 @@ class CortexEngine:
             return None
         return tuple(int(s) for s in self.mesh.devices.shape)
 
+    # -- per-agent incremental UTF-8 decode --------------------------------
+    def _decoder(self, agent_id: str):
+        dec = self._decoders.get(agent_id)
+        if dec is None:
+            dec = self._decoders[agent_id] = self.tok.stream_decoder()
+        return dec
+
+    def agent_text(self, agent_id: str) -> str:
+        """The agent's full decoded text as of the last drain, INCLUDING the
+        would-be flush of a codepoint left incomplete at the window
+        boundary — i.e. exactly what ``tok.decode(tokens)`` yields for the
+        same stream. Non-destructive: the decoder keeps buffering, so the
+        live stream stays bitwise when the missing bytes arrive."""
+        for v in (*self.mains, *self.sides):
+            if v.agent_id == agent_id:
+                dec = self._decoders.get(agent_id)
+                return v.text + (dec.tail() if dec is not None else "")
+        rec = self.registry.get(agent_id)
+        view = rec.saved["view"] if rec.saved else None
+        if view is None:
+            raise KeyError(agent_id)
+        dec = self._decoders.get(agent_id)
+        return view.text + (dec.tail() if dec is not None else "")
+
     # -- legacy views over the device state --------------------------------
     @property
     def main_caches(self):
@@ -866,6 +904,8 @@ class CortexEngine:
         self.mains[lane] = m
         m.text, m.tokens = prompt, list(ids)
         m.position, m.active, m.steps = len(ids), True, 0
+        m.prompt_len = len(ids)
+        self._decoders[aid] = self.tok.stream_decoder()  # fresh byte stream
         self.prism.acquire(m.agent_id)
         rec = self.registry.bind(aid, lane)
         rec.bound_tick = self.stats["ticks"]
@@ -885,6 +925,7 @@ class CortexEngine:
             self.prism.release(cur.agent_id)
             self.registry.release(cur.agent_id)
             self.router.reset(cur.agent_id)
+            self._decoders.pop(cur.agent_id, None)
         if agent_id is None:
             agent_id = f"main{lane}"
             if agent_id in self.registry and (
@@ -1187,7 +1228,11 @@ class CortexEngine:
         self.stats["drains"] += 1
         quiet = True
 
-        # 1. rivers: append the window's tokens
+        # 1. rivers: append the window's tokens. Decode is INCREMENTAL
+        # (ISSUE 9 bugfix): a multi-byte codepoint split across the drain
+        # boundary stays buffered in the agent's decoder instead of
+        # becoming U+FFFD — m.text is always a bitwise prefix of the
+        # one-shot decode, and agent_text() exposes the exact final form.
         main_chunks: dict[int, str] = {}
         for m in self.mains:
             if not m.active:
@@ -1195,12 +1240,14 @@ class CortexEngine:
             if ("main", m.lane) in self._fresh_wakes:
                 continue  # woke after this window ran: not on device for it
             toks = [int(t) for t in main_ring[m.lane, :n] if t >= 0]
-            chunk = self.tok.decode(toks)
+            chunk = self._decoder(m.agent_id).feed(toks)
             m.tokens.extend(toks)
             m.text += chunk
             m.position += len(toks)
             m.steps += len(toks)
             main_chunks[m.lane] = chunk
+            if self.stream_tap is not None and toks:
+                self.stream_tap(m, chunk, toks)
 
         # 2. streams: append, detect completion (trigger or step budget)
         finished = []
@@ -1215,13 +1262,22 @@ class CortexEngine:
             allowed = max(0, self.side_max_steps - (len(s.tokens) - s.prompt_len))
             raw = raw[:allowed]
             s.tokens.extend(raw)
-            chunk = self.tok.decode(raw)
+            # incremental decode (ISSUE 9 bugfix): same contract as the
+            # rivers — a codepoint split across windows never corrupts
+            # s.text or the thought handed to the merge gate
+            chunk = self._decoder(s.agent_id).feed(raw)
             s.text += chunk
+            if self.stream_tap is not None and raw:
+                self.stream_tap(s, chunk, raw)
             all_trig = self.router.feed(s.agent_id, chunk)
             quiet = quiet and not all_trig
             trig = [t for t in all_trig if t.kind in ("done", "answer")]
             generated = len(s.tokens) - s.prompt_len
             if trig or generated >= self.side_max_steps:
+                # end of this stream: flush the decoder so s.text equals
+                # the one-shot decode bitwise (an incomplete trailing
+                # codepoint replaces, exactly as decode(tokens) would)
+                s.text += self._decoder(s.agent_id).flush()
                 answer = next((t.payload for t in trig if t.kind == "answer"), None)
                 if answer is not None:
                     thought = answer
@@ -1304,6 +1360,7 @@ class CortexEngine:
             self._agent_seq += 1
             self.sides[lane] = s
         s.task, s.text = task, ""
+        self._decoders[s.agent_id] = self.tok.stream_decoder()
         s.parent_lane = parent.lane
         s.tokens = list(ids)
         s.position = parent.position  # continues the stream's positional frame
@@ -1333,8 +1390,36 @@ class CortexEngine:
         self.router.reset(s.agent_id)
         self.prism.release(s.agent_id)
         self.registry.release(s.agent_id)
+        self._decoders.pop(s.agent_id, None)
         s.active = False
         self.history.append({"event": "retire", "agent": s.agent_id})
+
+    def retire_main(self, lane: int):
+        """Retire a river lane without replacing it (ISSUE 9: the serving
+        front-end completes a request by freeing its lane for the next
+        admission). Boundary op — drains first; refuses while side streams
+        still target the lane for their merge (same identity-corruption
+        hazard :meth:`hibernate` guards against)."""
+        m = self.mains[lane]
+        if not m.active:
+            return
+        if lane in self._lanes_with_children():
+            raise ValueError(
+                f"cannot retire main lane {lane}: side streams still "
+                f"target it for their merge"
+            )
+        self.drain()
+        self.window.on_event()  # composition change: back to the base window
+        act_a = self._jit_retire_main(self.state.main_active, lane)
+        self.state = dataclasses.replace(self.state, main_active=act_a)
+        self.stats["aux_dispatches"] += 1
+        m.text += self._decoder(m.agent_id).flush()  # final text == decode(tokens)
+        self.router.reset(m.agent_id)
+        self.prism.release(m.agent_id)
+        self.registry.release(m.agent_id)
+        self._decoders.pop(m.agent_id, None)
+        m.active = False
+        self.history.append({"event": "retire", "agent": m.agent_id})
 
     # ------------------------------------------------------------------
     # tiered memory (ISSUE 7): hibernate parks an agent's lane in the
@@ -1409,6 +1494,10 @@ class CortexEngine:
             "sampling": dataclasses.asdict(sp),
             "router": self.router.export_state(agent_id),
             "hibernate_tick": self.stats["ticks"],
+            # a codepoint may be split across the hibernation boundary: the
+            # decoder's buffered bytes ride the snapshot so the text stream
+            # resumes bitwise even across a process crash (ISSUE 9)
+            "utf8_pending": list(self._decoder(agent_id).pending),
         }
         self.store.put(agent_id, snap, meta=meta)  # device_get inside: the one sync
         self.stats["aux_dispatches"] += 2
@@ -1523,6 +1612,7 @@ class CortexEngine:
             self.registry.mark_lost(agent_id)
             self.store.drop(agent_id)
             self.router.reset(agent_id)
+            self._decoders.pop(agent_id, None)
             self.stats["lost_agents"] += 1
             self.history.append(
                 {"event": "lost", "agent": agent_id, "error": repr(err)}
@@ -1613,6 +1703,10 @@ class CortexEngine:
             self.registry.hibernate(key, {"view": view, "sampling": sp})
             if meta.get("router"):
                 self.router.restore_state(key, meta["router"])
+            if meta.get("utf8_pending"):
+                # resume mid-codepoint: the decoder picks the byte stream
+                # back up exactly where the dead process left it
+                self._decoder(key).restore(bytes(meta["utf8_pending"]))
             self.stats["recoveries"] += 1
             self.history.append({"event": "adopt", "agent": key})
             adopted.append(key)
@@ -1643,6 +1737,11 @@ class CortexEngine:
         if hibernate_ok:
             did += self._auto_hibernate()
         did += self._commit_ready_wakes(wait=wait and bool(self._pending_wakes))
+        if self.admission_hook is not None:
+            # front-end admission control (ISSUE 9): retire finished
+            # request lanes and admit queued work — all boundary ops, so
+            # the pipelined window is never flushed by an admission
+            did += bool(self.admission_hook())
         return did
 
     # ------------------------------------------------------------------
@@ -1675,6 +1774,7 @@ class CortexEngine:
         self.router.reset(s.agent_id)
         self.prism.release(s.agent_id)
         self.registry.release(s.agent_id)
+        self._decoders.pop(s.agent_id, None)
         s.active = False
 
     # ------------------------------------------------------------------

@@ -1,17 +1,32 @@
-"""Serving launcher: plain continuous-batching server or the Warp-Cortex
-multi-agent engine.
+"""Serving launcher: the async front-end over either backend (ISSUE 9).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-0.5b --mode cortex
+    # multi-tenant, streaming, weighted-fair — the cortex engine backend
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-0.5b --mode cortex \
+        --tenants gold:4,free:1 \
+        --request "gold:0:Question: what scales? [TASK: verify memory math] Answer:" \
+        --request "free:0:Summarize the architecture."
+
+    # plain continuous batching behind the same front-end
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --mode batch
+
+Requests stream: decoded chunks print as the backend commits them (bitwise
+identical to the end-of-run decode — the incremental UTF-8 decoder), and a
+final per-tenant SLO summary (TTFT, time-per-output-token, p50/p99 tick
+latency, token shares, fairness counters) mirrors what
+benchmarks/bench_serving.py records.
 
 Crash recovery (ISSUE 8): point ``--cold-dir`` at a persistent directory
 and a later run with ``--recover`` rebuilds the cold tier from disk
 (integrity-checked; corrupt blobs quarantined) and re-adopts the agents it
 finds — their streams continue bitwise where the dead process stopped.
+``--wake-deadline`` bounds every tier promotion (engine ``wake`` and
+server ``unpark``) so a stalled disk degrades to a counted failure
+instead of a hang.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 
 import jax
 
@@ -21,8 +36,31 @@ from repro.core.prism import Prism
 from repro.data.tokenizer import ByteTokenizer
 from repro.memory import SynapseStore
 from repro.models import model as model_lib
+from repro.serving.frontend import ServingFrontend
 from repro.serving.sampler import SamplingParams
 from repro.serving.server import BatchServer
+
+DEFAULT_REQUESTS = [
+    "gold:0:Question: what makes this system scale? [TASK: verify memory math] Answer:",
+    "free:0:Summarize the warp-cortex architecture in one line.",
+]
+
+
+def parse_tenants(spec: str) -> dict[str, float]:
+    """"gold:4,free:1" -> {"gold": 4.0, "free": 1.0}."""
+    out = {}
+    for part in spec.split(","):
+        name, _, w = part.strip().partition(":")
+        out[name] = float(w) if w else 1.0
+    return out
+
+
+def parse_request(spec: str) -> tuple[str, int, str]:
+    """"tenant:priority:prompt" -> (tenant, priority, prompt); the prompt may
+    itself contain colons."""
+    tenant, _, rest = spec.partition(":")
+    prio, _, prompt = rest.partition(":")
+    return tenant, int(prio or 0), prompt
 
 
 def main():
@@ -31,8 +69,18 @@ def main():
     ap.add_argument("--mode", default="cortex", choices=["cortex", "batch"])
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--prompt", default="Question: what makes this system scale? [TASK: verify memory math] Answer:")
-    ap.add_argument("--ticks", type=int, default=30)
+    ap.add_argument("--tenants", default="gold:4,free:1",
+                    help="weighted-fair tenant spec, e.g. 'gold:4,free:1'")
+    ap.add_argument("--request", action="append", default=None,
+                    metavar="TENANT:PRIORITY:PROMPT",
+                    help="a request to serve (repeatable); higher priority "
+                         "admits sooner within the starvation bound")
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--no-stream", action="store_true",
+                    help="print only final texts instead of live chunks")
+    ap.add_argument("--wake-deadline", type=float, default=None, metavar="SECONDS",
+                    help="bound every cold->device promotion: engine wake() "
+                         "and server unpark() fail observably past this")
     ap.add_argument("--cold-dir", default=None,
                     help="directory for the cold (disk) tier; enables --recover")
     ap.add_argument("--recover", action="store_true",
@@ -44,56 +92,95 @@ def main():
     params = model_lib.init_params(jax.random.key(0), cfg)
     tok = ByteTokenizer(cfg.vocab_size)
     store = SynapseStore(cold_dir=args.cold_dir) if args.cold_dir else None
+    tenants = parse_tenants(args.tenants)
 
+    engine = None
     if args.mode == "batch":
-        server = BatchServer(params, cfg, tok, n_lanes=4, capacity=512,
-                             sampling=SamplingParams(temperature=0.9),
-                             **({"store": store} if store else {}))
-        server.submit(args.prompt, max_new_tokens=32)
-        for r in server.run_until_done():
-            print(f"[{r.rid}] {r.text!r}" + (f"  ERROR: {r.error}" if r.error else ""))
-        return
+        backend = BatchServer(params, cfg, tok, n_lanes=4, capacity=512,
+                              sampling=SamplingParams(temperature=0.9),
+                              wake_deadline_s=args.wake_deadline,
+                              **({"store": store} if store else {}))
+    else:
+        engine = CortexEngine(Prism(params, cfg), tok, n_main=2, max_side=4,
+                              main_capacity=512, side_max_steps=12, theta=-1.0,
+                              sampling=SamplingParams(temperature=1.0),
+                              wake_deadline_s=args.wake_deadline,
+                              **({"store": store} if store else {}))
+        if args.recover:
+            if not args.cold_dir:
+                ap.error("--recover requires --cold-dir")
+            rec_report = engine.store.recover(args.cold_dir)
+            adopted = engine.adopt_hibernated()
+            print(f"recover: {len(rec_report['recovered'])} cold entries rebuilt "
+                  f"({len(rec_report['orphans_adopted'])} orphan blobs), "
+                  f"{len(rec_report['quarantined'])} quarantined, "
+                  f"{len(rec_report['lost'])} lost; "
+                  f"{len(adopted)} agents re-adopted: {adopted}")
+            for aid in adopted:
+                engine.wake(aid)
+        backend = engine
 
-    prism = Prism(params, cfg)
-    engine = CortexEngine(prism, tok, n_main=1, max_side=4, main_capacity=512,
-                          side_max_steps=12, theta=-1.0,
-                          sampling=SamplingParams(temperature=1.0),
-                          **({"store": store} if store else {}))
-    if args.recover:
-        if not args.cold_dir:
-            ap.error("--recover requires --cold-dir")
-        rec_report = engine.store.recover(args.cold_dir)
-        adopted = engine.adopt_hibernated()
-        print(f"recover: {len(rec_report['recovered'])} cold entries rebuilt "
-              f"({len(rec_report['orphans_adopted'])} orphan blobs), "
-              f"{len(rec_report['quarantined'])} quarantined, "
-              f"{len(rec_report['lost'])} lost; "
-              f"{len(adopted)} agents re-adopted: {adopted}")
-        for aid in adopted:
-            engine.wake(aid)
-    engine.submit(args.prompt)
-    engine.run(args.ticks)
-    print("events:", *engine.history, sep="\n  ")
-    rep = engine.memory_report()
-    tiers, agents = rep["tiers"], rep["agents"]
-    print(f"memory: weights {rep['weight_bytes']/1e6:.1f}MB shared across "
-          f"{rep['n_agents']} agents; ctx/agent {rep['context_bytes_per_agent']/1e6:.2f}MB")
-    print(f"tiers:  hot {tiers['hot_bytes']/1e6:.2f}MB (device) | "
-          f"warm {tiers['warm_bytes']/1e6:.2f}MB (host, {tiers['n_warm']} agents) | "
-          f"cold {tiers['cold_bytes']/1e6:.2f}MB (disk, {tiers['n_cold']} agents)")
-    print(f"agents: {agents['registered']} registered, {agents['active']} active, "
-          f"{agents['hibernated']} hibernated, {agents['lost']} lost")
-    # resilience counters (ISSUE 8): all zeros on a healthy run — nonzero
-    # values are the memory hierarchy degrading instead of crashing
-    srep = engine.store.report()
-    print(f"faults: {srep['stat_quarantined']} quarantined, "
-          f"{srep['stat_wake_retries']} wake retries, "
-          f"{srep['stat_recovered']} recovered, "
-          f"{srep['stat_prefetch_errors']} prefetch errors, "
-          f"{srep['stat_worker_respawns']} worker respawns; "
-          f"engine: {engine.stats['wake_failures']} wake failures, "
-          f"{engine.stats['lost_agents']} lost, "
-          f"{engine.stats['recoveries']} recoveries")
+    fe = ServingFrontend(backend, tenants=tenants,
+                         default_max_new_tokens=args.max_new_tokens)
+    lock = threading.Lock()  # interleaved chunk prints stay line-atomic
+
+    def pump(rid, tenant, stream):
+        for chunk in stream:
+            with lock:
+                print(f"[{rid}/{tenant}] {chunk!r}")
+        with lock:
+            print(f"[{rid}/{tenant}] <{stream.status}>")
+
+    printers = []
+    for spec in args.request or DEFAULT_REQUESTS:
+        tenant, prio, prompt = parse_request(spec)
+        s = fe.submit(prompt, tenant=tenant, priority=prio)
+        if not args.no_stream:
+            t = threading.Thread(target=pump, args=(s.rid, tenant, s), daemon=True)
+            t.start()
+            printers.append(t)
+    fe.serve()
+    for t in printers:
+        t.join(timeout=10)
+
+    m = fe.metrics()
+    if args.no_stream:
+        for rid, req in sorted(fe.requests.items()):
+            print(f"[{rid}/{req.tenant}] <{req.status}> {req.stream.text!r}")
+    print(f"\nserving: {m['completed']} completed | "
+          f"ttft p50 {m['ttft_s']['p50']*1e3:.1f}ms p99 {m['ttft_s']['p99']*1e3:.1f}ms | "
+          f"tick p50 {m['tick_latency_s']['p50']*1e3:.2f}ms "
+          f"p99 {m['tick_latency_s']['p99']*1e3:.2f}ms")
+    for name, t in m["tenants"].items():
+        print(f"tenant {name}: weight {t['weight']:g}, share {t['token_share']:.2f} "
+              f"({t['tokens_out']} toks), admitted {t['admitted']}, "
+              f"rejected {t['rejected']}, ttft p50 {t['ttft_p50_s']*1e3:.1f}ms")
+    f = m["fairness"]
+    print(f"fairness: {f['admission_rounds']} admission rounds, "
+          f"{f['starvation_promotions']} starvation promotions "
+          f"(bound {f['starvation_rounds']})")
+
+    if engine is not None:
+        rep = engine.memory_report()
+        tiers, agents = rep["tiers"], rep["agents"]
+        print(f"memory: weights {rep['weight_bytes']/1e6:.1f}MB shared across "
+              f"{rep['n_agents']} agents; ctx/agent {rep['context_bytes_per_agent']/1e6:.2f}MB")
+        print(f"tiers:  hot {tiers['hot_bytes']/1e6:.2f}MB (device) | "
+              f"warm {tiers['warm_bytes']/1e6:.2f}MB (host, {tiers['n_warm']} agents) | "
+              f"cold {tiers['cold_bytes']/1e6:.2f}MB (disk, {tiers['n_cold']} agents)")
+        print(f"agents: {agents['registered']} registered, {agents['active']} active, "
+              f"{agents['hibernated']} hibernated, {agents['lost']} lost")
+        # resilience counters (ISSUE 8): all zeros on a healthy run — nonzero
+        # values are the memory hierarchy degrading instead of crashing
+        srep = engine.store.report()
+        print(f"faults: {srep['stat_quarantined']} quarantined, "
+              f"{srep['stat_wake_retries']} wake retries, "
+              f"{srep['stat_recovered']} recovered, "
+              f"{srep['stat_prefetch_errors']} prefetch errors, "
+              f"{srep['stat_worker_respawns']} worker respawns; "
+              f"engine: {engine.stats['wake_failures']} wake failures, "
+              f"{engine.stats['lost_agents']} lost, "
+              f"{engine.stats['recoveries']} recoveries")
 
 
 if __name__ == "__main__":

@@ -55,6 +55,13 @@ class Request:
     lane: int = -1
     prompt_len: int = 0  # len(encode(prompt, bos=True)), set at admission
     error: str | None = None  # terminal failure (lost parked snapshot, ...)
+    # how the request left the server: "" while live, then "ok" (EOS/budget),
+    # "cancelled" (ISSUE 9: a cancel is an observable completion — the rid
+    # lands in `finished` like any other outcome), or "error"
+    status: str = ""
+    # stateful UTF-8 decoder (ISSUE 9 bugfix): tokens decode incrementally,
+    # so a codepoint split across steps never becomes U+FFFD in `text`
+    decoder: object = field(default=None, repr=False)
 
 
 class BatchServer:
@@ -71,6 +78,7 @@ class BatchServer:
         seed: int = 0,
         mesh=None,
         store: SynapseStore | None = None,
+        wake_deadline_s: float | None = None,
     ):
         """``mesh``: a lane mesh (``launch.mesh.make_lane_mesh``) spreads
         the per-request KV lanes over its ``lane`` axis — the plain-serving
@@ -112,7 +120,20 @@ class BatchServer:
         # invalidate (see SampCache)
         self._samp_cache = SampCache()
         self.stats = {"steps": 0, "overlapped": 0, "rollbacks": 0,
-                      "lost_requests": 0}
+                      "lost_requests": 0, "cancelled": 0}
+        # default promotion deadline applied to unpark() unless overridden
+        # per call (mirrors the engine's wake_deadline_s)
+        self.wake_deadline_s = wake_deadline_s
+        # serving front-end hooks (ISSUE 9). ``taps[rid]`` is called as
+        # tap(req, chunk, toks, done) at commit granularity — the moment a
+        # step's tokens land on the host — so callers stream text mid-
+        # flight; chunks are incremental-decoder output, so their
+        # concatenation equals the final text bitwise. ``admission_hook``
+        # runs at the top of every admission boundary (and ONLY there: the
+        # pipelined loop reaches _admit with nothing in flight), letting a
+        # front-end feed `queue` without ever flushing a window.
+        self.taps: dict[int, object] = {}
+        self.admission_hook = None
 
         self._jit_prefill = jax.jit(
             lambda p, toks, c: model_lib.prefill(p, cfg, {"tokens": toks}, c, spec=self.spec)
@@ -135,33 +156,63 @@ class BatchServer:
         per-lane params ride one shared sampling pass (sample_lanes), so a
         greedy request batches with exploratory ones."""
         self._rid += 1
-        self.queue.append(Request(self._rid, prompt, max_new_tokens, sampling))
+        req = Request(self._rid, prompt, max_new_tokens, sampling)
+        req.decoder = self.tok.stream_decoder()
+        self.queue.append(req)
         return self._rid
 
+    def _finish(self, req: Request, status: str, error: str | None = None):
+        """Every terminal path funnels here: the request is marked done with
+        its outcome, its decoder flushes (final text == one-shot decode
+        bitwise), it lands in `finished`, and its tap fires once more with
+        done=True so a streaming caller always observes the end."""
+        if error is not None:
+            req.error = error
+        req.status = status
+        req.done = True
+        tail = req.decoder.flush() if req.decoder is not None else ""
+        req.text += tail
+        self.finished.append(req)
+        tap = self.taps.pop(req.rid, None)
+        if tap is not None:
+            tap(req, tail, [], True)
+
     def cancel(self, rid: int) -> bool:
-        """Retire a request mid-flight (queued or decoding). Freeing a lane
-        is a composition change: the samp cache must be invalidated so the
-        next admission rebuilds the stacked params — a recycled lane must
-        never inherit the cancelled request's sampling."""
-        for i, req in enumerate(self.queue):
-            if req.rid == rid:
-                self.queue.pop(i)
-                return True
-        for lane, req in enumerate(self.lanes):
-            if req is not None and req.rid == rid:
-                self.lanes[lane] = None
-                self._samp_cache.invalidate()
-                return True
-        if rid in self.parked:
-            self.parked.pop(rid)
+        """Retire a request mid-flight (queued, decoding, parked, or
+        resuming). Freeing a lane is a composition change: the samp cache
+        must be invalidated so the next admission rebuilds the stacked
+        params — a recycled lane must never inherit the cancelled request's
+        sampling. A cancelled rid does NOT vanish (ISSUE 9 bugfix): it is
+        marked done with status "cancelled", appended to `finished`, and
+        counted in ``stats["cancelled"]`` — every observable surface agrees
+        on what happened to it."""
+        req, lane = None, -1
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                req = self.queue.pop(i)
+                break
+        if req is None:
+            for l, r in enumerate(self.lanes):
+                if r is not None and r.rid == rid:
+                    req, lane = r, l
+                    self.lanes[l] = None
+                    self._samp_cache.invalidate()
+                    break
+        if req is None and rid in self.parked:
+            req = self.parked.pop(rid)
             self.store.drop(f"req{rid}")
-            return True
-        for i, (req, _) in enumerate(self._resume):
-            if req.rid == rid:
-                self._resume.pop(i)
-                self.store.drop(f"req{rid}")
-                return True
-        return False
+        if req is None:
+            for i, (r, _) in enumerate(self._resume):
+                if r.rid == rid:
+                    req = r
+                    self._resume.pop(i)
+                    self.store.drop(f"req{rid}")
+                    break
+        if req is None:
+            return False
+        self.stats["cancelled"] += 1
+        self._finish(req, "cancelled")
+        return True
 
     # ------------------------------------------------------------------
     def park(self, rid: int) -> bool:
@@ -202,6 +253,8 @@ class BatchServer:
         def put_fn(host, _s=rep):
             return jax.device_put(host, _s) if _s is not None else jax.device_put(host)
 
+        if deadline_s is None:
+            deadline_s = self.wake_deadline_s  # server-wide default (ISSUE 9)
         self._resume.append(
             (req, self.store.prefetch(f"req{rid}", put_fn, deadline_s=deadline_s))
         )
@@ -211,11 +264,9 @@ class BatchServer:
         """Terminal per-request degradation: the parked snapshot could not
         be promoted (quarantined blob, deadline, dead worker). The request
         finishes with ``error`` set; every other stream keeps decoding."""
-        req.error = repr(err) if err is not None else "wake failed"
-        req.done = True
         self.store.drop(f"req{req.rid}")
-        self.finished.append(req)
         self.stats["lost_requests"] += 1
+        self._finish(req, "error", repr(err) if err is not None else "wake failed")
 
     def _admit_unparked(self, *, wait: bool = False):
         """Land resume tickets whose prefetched buffers are ready (all of
@@ -257,6 +308,10 @@ class BatchServer:
         self._resume = still
 
     def _admit(self):
+        if self.admission_hook is not None:
+            # front-end admission control runs at this boundary only — the
+            # hook may push into `queue` but never touches device state
+            self.admission_hook()
         self._admit_unparked()
         for lane in range(self.n_lanes):
             if self.lanes[lane] is None and self.queue:
@@ -310,21 +365,32 @@ class BatchServer:
 
     def _commit(self, new_np) -> bool:
         """Apply one step's sampled tokens to the request views; returns
-        True when the lane composition changed (a request finished)."""
+        True when the lane composition changed (a request finished).
+
+        Text accrues through the request's stateful UTF-8 decoder (ISSUE 9
+        bugfix): the old per-token ``decode([t])`` turned every multi-byte
+        codepoint into replacement chars, since no single byte of it is
+        valid alone. The decoder buffers the incomplete tail instead, and
+        the terminal flush in :meth:`_finish` makes the final ``req.text``
+        bitwise equal to ``decode(req.tokens[prompt_len:])``."""
         changed = False
         for lane, req in enumerate(self.lanes):
             if req is None:
                 continue
             t = int(new_np[lane])
             req.tokens.append(t)
-            req.text += self.tok.decode([t])
+            chunk = req.decoder.feed([t]) if req.decoder is not None \
+                else self.tok.decode([t])
+            req.text += chunk
             gen = len(req.tokens) - req.prompt_len
+            tap = self.taps.get(req.rid)
+            if tap is not None:
+                tap(req, chunk, [t], False)
             if t == self.tok.eos_id or gen >= req.max_new_tokens:
-                req.done = True
-                self.finished.append(req)
                 self.lanes[lane] = None
                 self._samp_cache.invalidate()
                 changed = True
+                self._finish(req, "ok")
         return changed
 
     def _can_speculate(self) -> bool:

@@ -592,4 +592,10 @@ def test_server_cancel_parked_and_resuming(setup):
     srv.unpark(rid2)
     assert srv.cancel(rid2)  # mid-resume: ticket abandoned, snapshot dropped
     assert f"req{rid2}" not in srv.store and not srv._resume
-    assert srv.run_until_done() == []
+    # cancelled requests stay observable (ISSUE 9): done, status recorded,
+    # counted in stats, present in finished — they no longer vanish
+    done = {r.rid: r for r in srv.finished}
+    assert set(done) == {rid, rid2}
+    assert all(r.done and r.status == "cancelled" for r in done.values())
+    assert srv.stats["cancelled"] == 2
+    assert {r.rid for r in srv.run_until_done()} == {rid, rid2}  # nothing NEW
