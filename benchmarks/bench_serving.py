@@ -98,10 +98,138 @@ def run(*, n_lanes: int = 4, per_tenant: int = 40, budget: int = 16,
     return out
 
 
+def _pctl(xs) -> dict:
+    from repro.serving.frontend import percentile
+
+    return {"p50": percentile(xs, 50), "p99": percentile(xs, 99), "n": len(xs)}
+
+
+def transport_ab(*, n_lanes: int = 4, n_requests: int = 4,
+                 budget: int = 32) -> dict:
+    """Transport-overhead A/B (ISSUE 10): the SAME request set consumed
+    once through in-process :class:`TokenStream` handles and once over a
+    loopback HTTP/SSE connection, with client-observed TTFT (submit to
+    first text chunk) and TPOT ((last - first) / (tokens - 1)) for each
+    leg. Each leg warms the jit caches off the clock; ``n_requests ==
+    n_lanes`` keeps queue wait out of the comparison, so the delta is the
+    wire path itself — recorded as ``serving.transport``."""
+    import threading
+
+    from repro.serving.transport import SSEClient, TransportServer
+
+    cfg = get_config("qwen2.5-0.5b", reduced=True)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+
+    def make_fe():
+        srv = BatchServer(params, cfg, ByteTokenizer(cfg.vocab_size),
+                          n_lanes=n_lanes, capacity=128,
+                          sampling=SamplingParams(greedy=True))
+        return ServingFrontend(srv, tenants={"t": 1.0})
+
+    def leg_summary(recs, tokens, wall_s):
+        ttfts = [r["first"] - r["start"] for r in recs if r["first"]]
+        tpots = [(r["done"] - r["first"]) / (n - 1)
+                 for r, n in zip(recs, tokens) if r["first"] and n > 1]
+        total = sum(tokens)
+        return {"ttft_s": _pctl(ttfts), "tpot_s": _pctl(tpots),
+                "wall_s": wall_s, "tokens_out": total,
+                "tokens_per_s": total / wall_s if wall_s > 0 else 0.0}
+
+    prompts = [PROMPTS[i % len(PROMPTS)].format(i=i) for i in range(n_requests)]
+
+    # -- leg A: in-process stream handles -------------------------------
+    fe = make_fe()
+    fe.submit("warmup", tenant="t", max_new_tokens=4)
+    fe.serve()  # jit compile off the clock
+
+    def consume(stream, rec):
+        for _ in stream:
+            now = time.perf_counter()
+            if rec["first"] is None:
+                rec["first"] = now
+            rec["done"] = now
+
+    recs, rids, threads = [], [], []
+    t0 = time.perf_counter()
+    for p in prompts:
+        rec = {"start": time.perf_counter(), "first": None, "done": None}
+        s = fe.submit(p, tenant="t", max_new_tokens=budget)
+        th = threading.Thread(target=consume, args=(s, rec), daemon=True)
+        th.start()
+        recs.append(rec)
+        rids.append(s.rid)
+        threads.append(th)
+    fe.serve()
+    for th in threads:
+        th.join(timeout=60)
+    wall_a = time.perf_counter() - t0
+    in_proc = leg_summary(recs, [fe.requests[r].tokens_out for r in rids],
+                          wall_a)
+
+    # -- leg B: the same set over loopback HTTP/SSE ---------------------
+    fe2 = make_fe()
+    with TransportServer(fe2) as srv:
+        from repro.serving.transport import generate_sync
+
+        generate_sync(srv.host, srv.port, "warmup", tenant="t",
+                      max_new_tokens=4)
+
+        def wire_client(prompt, rec, out):
+            c = SSEClient(srv.host, srv.port)
+            try:
+                rec["start"] = time.perf_counter()
+                status, _ = c.generate(prompt, tenant="t",
+                                       max_new_tokens=budget)
+                assert status == 200, status
+                for ev in c.events():
+                    now = time.perf_counter()
+                    if "rid" in ev:
+                        out["rid"] = ev["rid"]
+                    elif "text" in ev:
+                        if rec["first"] is None:
+                            rec["first"] = now
+                        rec["done"] = now
+            finally:
+                c.close()
+
+        recs2 = [{"start": None, "first": None, "done": None}
+                 for _ in prompts]
+        outs = [{} for _ in prompts]
+        threads = [threading.Thread(target=wire_client, args=(p, r, o),
+                                    daemon=True)
+                   for p, r, o in zip(prompts, recs2, outs)]
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=120)
+        wall_b = time.perf_counter() - t0
+        loopback = leg_summary(
+            recs2, [fe2.requests[o["rid"]].tokens_out for o in outs], wall_b
+        )
+        loopback["transport_stats"] = dict(srv.stats)
+
+    return {
+        "n_lanes": n_lanes,
+        "n_requests": n_requests,
+        "budget": budget,
+        "in_process": in_proc,
+        "loopback": loopback,
+        "overhead": {
+            "ttft_p50_ms": (loopback["ttft_s"]["p50"]
+                            - in_proc["ttft_s"]["p50"]) * 1e3,
+            "tpot_p50_us": (loopback["tpot_s"]["p50"]
+                            - in_proc["tpot_s"]["p50"]) * 1e6,
+        },
+    }
+
+
 if __name__ == "__main__":
     import json
     import os
     import sys
 
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    print(json.dumps(run(), indent=1, default=str))
+    out = run()
+    out["transport"] = transport_ab()
+    print(json.dumps(out, indent=1, default=str))

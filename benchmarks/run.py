@@ -226,6 +226,33 @@ def serving_smoke() -> dict:
     return out
 
 
+def transport_smoke() -> dict:
+    """CI gate for the HTTP/SSE transport (ISSUE 10): the in-process vs
+    loopback A/B must produce both legs with sane SLOs, every loopback
+    stream must complete over a REAL socket (no disconnects, no stalled
+    writes on a healthy client), and the `serving.transport` section's key
+    set must stay intact."""
+    from benchmarks import bench_serving
+
+    out = bench_serving.transport_ab(n_lanes=2, n_requests=2, budget=8)
+    assert {"in_process", "loopback", "overhead"} <= set(out), set(out)
+    for leg in ("in_process", "loopback"):
+        row = out[leg]
+        assert {"ttft_s", "tpot_s", "wall_s", "tokens_per_s"} <= set(row)
+        assert row["ttft_s"]["n"] == out["n_requests"], (leg, row["ttft_s"])
+        assert row["ttft_s"]["p50"] > 0 and row["tokens_out"] > 0, (leg, row)
+    ts = out["loopback"]["transport_stats"]
+    assert ts["streams_ok"] == ts["streams_opened"] == out["n_requests"] + 1
+    assert ts["disconnects"] == 0 and ts["stalled_writes"] == 0, ts
+    assert {"ttft_p50_ms", "tpot_p50_us"} <= set(out["overhead"])
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    with open("benchmarks/artifacts/bench_transport_smoke.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"smoke,ok,transport: loopback SSE A/B complete, "
+          f"ttft overhead {out['overhead']['ttft_p50_ms']:.2f}ms")
+    return out
+
+
 def main() -> None:
     from benchmarks import bench_kernels, bench_synapse_quality, bench_table1, bench_table2, bench_throughput
 
@@ -268,6 +295,8 @@ def main() -> None:
             from benchmarks import bench_serving
 
             throughput["serving"] = bench_serving.run()
+            # in-process vs loopback wire overhead (ISSUE 10)
+            throughput["serving"]["transport"] = bench_serving.transport_ab()
         except Exception as e:
             print(f"serving,0,FAILED:{type(e).__name__}:{e}")
         with open(os.path.join(ROOT, "BENCH_throughput.json"), "w") as f:
@@ -287,16 +316,22 @@ if __name__ == "__main__":
     ap.add_argument("--serving", action="store_true",
                     help="with --smoke: run ONLY the serving front-end smoke "
                          "(weighted-fair shares + SLO key set)")
+    ap.add_argument("--transport", action="store_true",
+                    help="with --smoke: run ONLY the HTTP/SSE transport smoke "
+                         "(loopback A/B, writes bench_transport_smoke.json)")
     args = ap.parse_args()
     if args.smoke:
         if args.chaos:
             chaos_smoke()
         elif args.serving:
             serving_smoke()
+        elif args.transport:
+            transport_smoke()
         else:
             smoke()
             hibernate_smoke()
             serving_smoke()
+            transport_smoke()
             if args.lane:
                 lane_smoke()
     else:

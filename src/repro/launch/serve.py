@@ -9,6 +9,10 @@
     # plain continuous batching behind the same front-end
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --mode batch
 
+    # the same request set over REAL sockets (ISSUE 10): an HTTP/1.1 + SSE
+    # server fronts the frontend and each request becomes a loopback client
+    PYTHONPATH=src python -m repro.launch.serve --mode batch --listen 127.0.0.1:8080
+
 Requests stream: decoded chunks print as the backend commits them (bitwise
 identical to the end-of-run decode — the incremental UTF-8 decoder), and a
 final per-tenant SLO summary (TTFT, time-per-output-token, p50/p99 tick
@@ -63,6 +67,62 @@ def parse_request(spec: str) -> tuple[str, int, str]:
     return tenant, int(prio or 0), prompt
 
 
+def _serve_over_sockets(fe, args, lock):
+    """--listen mode (ISSUE 10): the same request set, but every request is
+    a real loopback HTTP client reading an SSE stream — the summary metrics
+    come back over ``GET /v1/metrics`` instead of the in-process handle."""
+    from repro.serving.transport import SSEClient, TransportServer, http_json
+
+    host, _, port = args.listen.partition(":")
+    srv = TransportServer(fe, host or "127.0.0.1", int(port or 0))
+    srv.start()
+    print(f"listening on {srv.url} (POST /v1/generate, GET /v1/metrics, "
+          f"POST /v1/cancel/<rid>)")
+
+    def client(tenant, prio, prompt):
+        c = SSEClient(srv.host, srv.port)
+        try:
+            status, _ = c.generate(prompt, tenant=tenant, priority=prio,
+                                   max_new_tokens=args.max_new_tokens)
+            if status != 200:
+                with lock:
+                    print(f"[{tenant}] HTTP {status}: {c.body_json()}")
+                return
+            rid, final = "?", {}
+            for ev in c.events():
+                if "rid" in ev:
+                    rid = ev["rid"]
+                elif "text" in ev and not args.no_stream:
+                    with lock:
+                        print(f"[{rid}/{tenant}] {ev['text']!r}")
+                elif ev.get("done"):
+                    final = ev
+            with lock:
+                print(f"[{rid}/{tenant}] <{final.get('status')}>")
+        finally:
+            c.close()
+
+    clients = []
+    for spec in args.request or DEFAULT_REQUESTS:
+        tenant, prio, prompt = parse_request(spec)
+        t = threading.Thread(target=client, args=(tenant, prio, prompt),
+                             daemon=True)
+        t.start()
+        clients.append(t)
+    for t in clients:
+        t.join()
+    code, m = http_json(srv.host, srv.port, "GET", "/v1/metrics")
+    ts = dict(srv.stats)
+    srv.stop()
+    print(f"transport: {ts['http_requests']} http requests, "
+          f"{ts['streams_ok']}/{ts['streams_opened']} streams ok, "
+          f"{ts['rejected_429']} rejected (429), "
+          f"{ts['disconnects']} disconnects")
+    if code != 200:
+        raise RuntimeError(f"GET /v1/metrics answered {code}")
+    return m
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-0.5b", choices=list_archs())
@@ -78,6 +138,10 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=32)
     ap.add_argument("--no-stream", action="store_true",
                     help="print only final texts instead of live chunks")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve the request set over real sockets: start the "
+                         "HTTP/SSE transport there and drive each request "
+                         "through a loopback client (port 0 = ephemeral)")
     ap.add_argument("--wake-deadline", type=float, default=None, metavar="SECONDS",
                     help="bound every cold->device promotion: engine wake() "
                          "and server unpark() fail observably past this")
@@ -124,26 +188,29 @@ def main():
                          default_max_new_tokens=args.max_new_tokens)
     lock = threading.Lock()  # interleaved chunk prints stay line-atomic
 
-    def pump(rid, tenant, stream):
-        for chunk in stream:
+    if args.listen is not None:
+        m = _serve_over_sockets(fe, args, lock)
+    else:
+        def pump(rid, tenant, stream):
+            for chunk in stream:
+                with lock:
+                    print(f"[{rid}/{tenant}] {chunk!r}")
             with lock:
-                print(f"[{rid}/{tenant}] {chunk!r}")
-        with lock:
-            print(f"[{rid}/{tenant}] <{stream.status}>")
+                print(f"[{rid}/{tenant}] <{stream.status}>")
 
-    printers = []
-    for spec in args.request or DEFAULT_REQUESTS:
-        tenant, prio, prompt = parse_request(spec)
-        s = fe.submit(prompt, tenant=tenant, priority=prio)
-        if not args.no_stream:
-            t = threading.Thread(target=pump, args=(s.rid, tenant, s), daemon=True)
-            t.start()
-            printers.append(t)
-    fe.serve()
-    for t in printers:
-        t.join(timeout=10)
-
-    m = fe.metrics()
+        printers = []
+        for spec in args.request or DEFAULT_REQUESTS:
+            tenant, prio, prompt = parse_request(spec)
+            s = fe.submit(prompt, tenant=tenant, priority=prio)
+            if not args.no_stream:
+                t = threading.Thread(target=pump, args=(s.rid, tenant, s),
+                                     daemon=True)
+                t.start()
+                printers.append(t)
+        fe.serve()
+        for t in printers:
+            t.join(timeout=10)
+        m = fe.metrics()
     if args.no_stream:
         for rid, req in sorted(fe.requests.items()):
             print(f"[{rid}/{req.tenant}] <{req.status}> {req.stream.text!r}")

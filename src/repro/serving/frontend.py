@@ -39,11 +39,15 @@ Three pieces:
   recorded in BENCH_throughput.json's ``serving`` section by
   benchmarks/bench_serving.py.
 
-What this module does NOT do (ROADMAP open item): a real socket
-transport. The front-end is in-process; callers are threads.
+The wire protocol lives in :mod:`repro.serving.transport` (ISSUE 10): an
+HTTP/1.1 + SSE server that maps ``POST /v1/generate`` onto :meth:`submit`
+/ :class:`TokenStream`, full-queue :class:`AdmissionError` onto HTTP 429,
+and client disconnects / stalled writers onto the observable-cancel path
+via the deferred-cancel and stream-backlog hooks in this module.
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from dataclasses import dataclass, field
@@ -58,13 +62,26 @@ class AdmissionError(RuntimeError):
     Back-pressure is explicit: callers retry or shed load themselves."""
 
 
+class ServeStalled(RuntimeError):
+    """`serve()` exhausted its tick budget (or could make no progress at
+    all) with requests still pending. ``stuck`` lists their rids — e.g. a
+    lane whose retirement keeps being refused because side streams still
+    target it."""
+
+    def __init__(self, message: str, stuck: list[int]):
+        super().__init__(message)
+        self.stuck = stuck
+
+
 def percentile(samples, q: float) -> float:
-    """Nearest-rank percentile; 0.0 on an empty sample set."""
+    """Deterministic nearest-rank percentile (rank ``ceil(q/100 · n)``,
+    1-based); 0.0 on an empty sample set. ``int(round(...))`` is NOT used:
+    banker's rounding picks inconsistent ranks on even-length samples."""
     if not samples:
         return 0.0
     s = sorted(samples)
-    idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
-    return float(s[idx])
+    rank = min(len(s), max(1, math.ceil(q / 100.0 * len(s))))
+    return float(s[rank - 1])
 
 
 class TokenStream:
@@ -75,11 +92,26 @@ class TokenStream:
     accumulated stream so far; after completion it is bitwise equal to the
     backend's final request text, which the ISSUE 9 decoder fix makes
     bitwise equal to ``tokenizer.decode(generated_tokens)``.
+
+    **Consumer back-pressure** (ISSUE 10): the handle tracks how far its
+    consumer has read (``__iter__`` / :meth:`next_chunk` advance a shared
+    cursor). When ``max_buffered_chars`` is set and the unread backlog
+    exceeds it — a stalled socket writer, a consumer thread that died —
+    ``on_overflow(rid)`` fires ONCE, outside the lock, from the producer
+    (pump) thread. The front-end maps it to a request cancel, so a stalled
+    consumer sheds exactly its own request instead of growing the backlog
+    without bound or ever blocking the pump.
     """
 
-    def __init__(self, rid: int):
+    def __init__(self, rid: int, *, max_buffered_chars: int | None = None,
+                 on_overflow=None):
         self.rid = rid
+        self.max_buffered_chars = max_buffered_chars
+        self.on_overflow = on_overflow
         self._chunks: list[str] = []
+        self._nread = 0              # chunks consumed via iter/next_chunk
+        self._unread_chars = 0       # pushed minus consumed (backlog)
+        self._overflowed = False
         self._cond = threading.Condition()
         self._closed = False
         self.status: str = ""        # "", then "ok" | "cancelled" | "error"
@@ -87,9 +119,17 @@ class TokenStream:
 
     # -- producer side (frontend taps) ---------------------------------
     def _push(self, chunk: str) -> None:
+        cb = None
         with self._cond:
             self._chunks.append(chunk)
+            self._unread_chars += len(chunk)
+            if (self.max_buffered_chars is not None and not self._overflowed
+                    and self._unread_chars > self.max_buffered_chars):
+                self._overflowed = True
+                cb = self.on_overflow
             self._cond.notify_all()
+        if cb is not None:
+            cb(self.rid)
 
     def _close(self, status: str, error: str | None = None) -> None:
         with self._cond:
@@ -109,17 +149,33 @@ class TokenStream:
         with self._cond:
             return self._closed
 
+    @property
+    def overflowed(self) -> bool:
+        with self._cond:
+            return self._overflowed
+
+    def next_chunk(self, timeout: float | None = None) -> str | None:
+        """Next unread chunk; ``""`` on timeout with the stream still open,
+        ``None`` once it is closed and fully drained. The polling primitive
+        a socket writer needs: it can interleave disconnect checks between
+        bounded waits instead of blocking forever in ``__iter__``."""
+        with self._cond:
+            self._cond.wait_for(
+                lambda: self._nread < len(self._chunks) or self._closed, timeout
+            )
+            if self._nread >= len(self._chunks):
+                return None if self._closed else ""
+            chunk = self._chunks[self._nread]
+            self._nread += 1
+            self._unread_chars -= len(chunk)
+            return chunk
+
     def __iter__(self):
         """Yield chunks until the stream closes (blocking mid-stream)."""
-        i = 0
         while True:
-            with self._cond:
-                while i >= len(self._chunks) and not self._closed:
-                    self._cond.wait()
-                if i >= len(self._chunks) and self._closed:
-                    return
-                chunk = self._chunks[i]
-            i += 1
+            chunk = self.next_chunk()
+            if chunk is None:
+                return
             if chunk:
                 yield chunk
 
@@ -191,10 +247,13 @@ class FairQueue:
 
     Scheduling order at each :meth:`pop` (one admission decision):
 
-    1. **Starvation bound** — if any queued request has waited at least
-       ``starvation_rounds`` decisions, the longest-waiting such request is
+    1. **Starvation bound** — if any queued request is aged
+       ``starvation_rounds`` or more (its age at a decision counts that
+       decision: a request enqueued at round R has age ``k`` at the k-th
+       decision after enqueue), the longest-waiting such request is
        admitted now. This bounds worst-case queue delay for ANY request at
-       ``starvation_rounds`` admissions, whatever its weight or priority.
+       ``starvation_rounds`` admission decisions, whatever its weight or
+       priority: a request aged exactly ``starvation_rounds`` is promoted.
     2. **Priority** — among queue heads, only the highest priority class
        present competes (higher = sooner).
     3. **WFQ** — within that class, the tenant with the smallest virtual
@@ -268,12 +327,16 @@ class FairQueue:
             top = max(t.queue[0].priority for t in backlogged)
             cands = [t for t in backlogged if t.queue[0].priority == top]
             normal = min(cands, key=lambda t: (t.vtime, t.name))
-            # starvation bound: if any head has out-waited the bound, the
+            # starvation bound: if any head has reached the bound, the
             # oldest such request (global arrival order) is admitted instead —
-            # a promotion only counts when it actually overrides normal order
+            # a promotion only counts when it actually overrides normal order.
+            # `rounds` was just incremented, so `rounds - submit_round` is the
+            # head's age AT this decision; `>=` admits a request aged exactly
+            # `starvation_rounds` (ISSUE 10 bugfix: the old `>` promoted one
+            # decision late, violating the documented bound)
             aged = [
                 t for t in backlogged
-                if self.rounds - t.queue[0].submit_round > self.starvation_rounds
+                if self.rounds - t.queue[0].submit_round >= self.starvation_rounds
             ]
             if aged:
                 t = min(aged, key=lambda t: t.queue[0].seq)
@@ -331,6 +394,11 @@ class ServingFrontend:
         self.live: dict[object, FrontRequest] = {}  # backend_id -> request
         self._rid = 0
         self._lock = threading.RLock()
+        # the thread that owns the backend (set by serve()/step() and the
+        # transport pump). Backend state is NOT thread-safe: a cancel from
+        # any other thread is deferred — flagged on the request and applied
+        # at the next admission boundary inside the pump's own loop.
+        self._pump_thread: threading.Thread | None = None
         # tick-latency sampling: (clock, backend step counter) at the last
         # commit observation; each later commit contributes
         # (dt / dsteps) samples — amortized per-tick latency as a caller
@@ -351,9 +419,16 @@ class ServingFrontend:
     # ------------------------------------------------------------------
     def submit(self, prompt: str, *, tenant: str = "default", priority: int = 0,
                max_new_tokens: int | None = None,
-               sampling: SamplingParams | None = None) -> TokenStream:
+               sampling: SamplingParams | None = None,
+               max_buffered_chars: int | None = None) -> TokenStream:
         """Queue a request; returns its stream handle immediately. Raises
-        :class:`AdmissionError` when the backlog is at ``max_queue``."""
+        :class:`AdmissionError` when the backlog is at ``max_queue``.
+
+        ``max_buffered_chars`` bounds the stream's unread backlog (ISSUE
+        10): a consumer that stalls past it — a socket writer stuck on a
+        dead client — gets its request cancelled at the next boundary
+        instead of buffering without bound. ``None`` (default) keeps the
+        in-process unbounded behavior."""
         with self._lock:
             if len(self.fq) >= self.max_queue:
                 self.fq.tenant(tenant).rejected += 1
@@ -364,16 +439,35 @@ class ServingFrontend:
             req = FrontRequest(
                 self._rid, prompt, tenant, priority,
                 max_new_tokens or self.default_max_new_tokens, sampling,
-                TokenStream(self._rid), t_submit=self.clock(), status="queued",
+                TokenStream(self._rid, max_buffered_chars=max_buffered_chars,
+                            on_overflow=self._overflow),
+                t_submit=self.clock(), status="queued",
             )
             self.requests[req.rid] = req
             self.fq.push(req)
             return req.stream
 
+    def _overflow(self, rid: int) -> None:
+        """A stream's unread backlog crossed its bound (fired from the pump
+        thread mid-commit): flag the request for a boundary cancel — never
+        re-enter the backend from inside its own tap."""
+        with self._lock:
+            req = self.requests.get(rid)
+            if req is not None and req.status not in ("ok", "cancelled", "error"):
+                req.cancel_requested = True
+
+    def _foreign_pump(self) -> bool:
+        t = self._pump_thread
+        return (t is not None and t.is_alive()
+                and t is not threading.current_thread())
+
     def cancel(self, rid: int) -> bool:
         """Cancel a queued or running request; its stream closes with
         status "cancelled" (queued immediately, running at the next
-        boundary in engine mode / via BatchServer.cancel in batch mode)."""
+        boundary in engine mode / via BatchServer.cancel in batch mode).
+        Called from a thread that does not own the backend — a transport
+        handler racing the pump — the running-request cancel is deferred to
+        the next admission boundary in BOTH modes."""
         with self._lock:
             req = self.requests.get(rid)
             if req is None or req.status in ("ok", "cancelled", "error"):
@@ -381,9 +475,9 @@ class ServingFrontend:
             if self.fq.remove(rid) is not None:
                 self._finish(req, "cancelled")
                 return True
-            if self._mode == "batch":
+            if self._mode == "batch" and not self._foreign_pump():
                 return self.backend.cancel(req.backend_id)  # tap closes stream
-            req.cancel_requested = True  # engine: honored at the boundary
+            req.cancel_requested = True  # honored at the next boundary
             return True
 
     def pending(self) -> int:
@@ -391,18 +485,56 @@ class ServingFrontend:
             return len(self.fq) + len(self.live)
 
     # ------------------------------------------------------------------
+    def step(self, ticks: int | None = None, *, pipeline: bool = True) -> int:
+        """Drive the backend for ONE bounded chunk; returns the backend
+        ticks it actually advanced. The transport pump loops this forever
+        (deferred cancels land at each chunk's admission boundary);
+        :meth:`serve` loops it until idle under a total budget."""
+        self._pump_thread = threading.current_thread()
+        if self._mode == "batch":
+            before = self.backend.stats["steps"]
+            self.backend.run_until_done(
+                max_ticks=ticks if ticks is not None else 256, pipeline=pipeline
+            )
+            return max(0, self.backend.stats["steps"] - before)
+        eng = self.backend
+        before = eng.stats["ticks"]
+        eng.run(ticks if ticks is not None else 8 * eng.sync_every)
+        return max(0, eng.stats["ticks"] - before)
+
     def serve(self, *, max_ticks: int = 100_000, pipeline: bool = True) -> None:
         """Pump the backend until every queued/live request completes.
         Admissions, retirements, and stream delivery all happen inside the
         backend's own loop via the installed hooks — this method just
-        drives it and returns when the front-end is idle."""
-        if self._mode == "batch":
-            while self.pending():
-                self.backend.run_until_done(max_ticks=max_ticks, pipeline=pipeline)
-        else:
-            eng = self.backend
-            while self.pending():
-                eng.run(min(max_ticks, 8 * eng.sync_every))
+        drives it and returns when the front-end is idle.
+
+        ``max_ticks`` is a TOTAL tick budget across the whole call (ISSUE
+        10 bugfix: it used to cap single iterations of an unbounded loop,
+        spinning forever when a request could never retire — e.g. a lane
+        whose ``retire_main`` keeps refusing while side streams target it).
+        Exhausting it — or a chunk that provably cannot advance — raises
+        :class:`ServeStalled` with the stuck rids."""
+        spent = 0
+        while self.pending():
+            chunk = max_ticks - spent
+            if chunk <= 0:
+                self._raise_stalled(f"serve() exhausted max_ticks={max_ticks}")
+            if self._mode == "engine":
+                chunk = min(chunk, 8 * self.backend.sync_every)
+            advanced = self.step(chunk, pipeline=pipeline)
+            spent += advanced
+            if advanced == 0 and self.pending():
+                self._raise_stalled(
+                    "serve() made no progress (backend refuses to run)"
+                )
+
+    def _raise_stalled(self, why: str):
+        with self._lock:
+            stuck = sorted(
+                {r.rid for r in self.live.values()}
+                | {r.rid for t in self.fq.tenants.values() for r in t.queue}
+            )
+        raise ServeStalled(f"{why}; stuck rids: {stuck}", stuck)
 
     # ------------------------------------------------------------------
     def _finish(self, req: FrontRequest, status: str, error: str | None = None):
@@ -422,9 +554,15 @@ class ServingFrontend:
     def _admit_batch(self) -> int:
         """Admission-boundary hook: fill free lanes from the fair queue.
         Runs inside ``BatchServer._admit`` — always at a step boundary with
-        nothing in flight, so admission never costs a flush."""
+        nothing in flight, so admission never costs a flush. Deferred
+        cancels (transport disconnects, stream-backlog overflow — flagged
+        from threads that do not own the backend) are applied here first,
+        so the lanes they free are refilled in the same boundary."""
         srv = self.backend
         admitted = 0
+        for req in list(self.live.values()):
+            if req.cancel_requested:
+                srv.cancel(req.backend_id)  # tap -> _finish: observable
         while True:
             free = sum(r is None for r in srv.lanes) - len(srv.queue) - len(srv._resume)
             if free <= 0:
@@ -509,10 +647,14 @@ class ServingFrontend:
             return  # side streams and non-frontend agents pass through
         now = self.clock()
         self._note_progress(now, self.backend.stats["ticks"])
-        if req.t_first is None:
-            req.t_first = now
-        req.tokens_out += len(toks)
-        self.fq.charge(req.tenant, len(toks))
+        if toks:
+            # guard like _batch_tap (ISSUE 10 bugfix): a drain callback with
+            # no tokens for this lane must not stamp TTFT — t_first means "a
+            # generated token exists", not "a drain happened"
+            if req.t_first is None:
+                req.t_first = now
+            req.tokens_out += len(toks)
+            self.fq.charge(req.tenant, len(toks))
         if chunk:
             req.stream._push(chunk)
             req.streamed_chars += len(chunk)

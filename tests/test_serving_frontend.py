@@ -38,6 +38,7 @@ from repro.serving.frontend import (
     AdmissionError,
     FairQueue,
     FrontRequest,
+    ServeStalled,
     ServingFrontend,
     TokenStream,
 )
@@ -99,10 +100,45 @@ def test_fair_queue_starvation_bound_holds():
             waited = n
             break
     # despite a 10000x weight disadvantage AND a lower priority class, the
-    # request is admitted within the bound (+1: the bound counts decisions
-    # after enqueue)
-    assert waited is not None and waited <= fq.starvation_rounds + 1
+    # request is admitted at EXACTLY the bound (ISSUE 10 bugfix: `rounds`
+    # is incremented before the comparison, so the old `>` admitted one
+    # decision late). Priority keeps normal order off `tiny` entirely, so
+    # equality proves the promotion fired at the boundary and not before.
+    assert waited == fq.starvation_rounds
     assert fq.starvation_promotions == 1
+
+
+def test_fair_queue_starvation_boundary_exact():
+    # pin the boundary from both sides: a request aged starvation_rounds - 1
+    # is NOT promoted, the same request one decision later IS
+    fq = FairQueue({"hog": 100.0, "tiny": 0.01}, starvation_rounds=4)
+    fq.push(_req(1, "tiny", priority=-1))
+    for i in range(20):
+        fq.push(_req(100 + i, "hog", priority=3))
+    for n in range(1, fq.starvation_rounds):
+        assert fq.pop().rid != 1, f"promoted early at decision {n}"
+    assert fq.starvation_promotions == 0
+    assert fq.pop().rid == 1  # decision #starvation_rounds: promoted
+    assert fq.starvation_promotions == 1
+
+
+def test_percentile_nearest_rank_deterministic():
+    from repro.serving.frontend import percentile
+
+    # nearest-rank: rank = ceil(q/100 * n), 1-based. int(round(...)) used
+    # banker's rounding, which picked rank 3 for p50 of an even-length
+    # sample (round(1.5) == 2 -> index 2); the deterministic rule says 2.
+    assert percentile([1, 2, 3, 4], 50) == 2.0
+    assert percentile([1, 2, 3, 4], 99) == 4.0
+    assert percentile([1, 2, 3, 4], 100) == 4.0
+    assert percentile([1, 2], 50) == 1.0
+    assert percentile([7], 99) == 7.0
+    assert percentile([], 50) == 0.0
+    # percentiles stay monotone in q
+    s = [5, 1, 9, 3, 7, 2]
+    qs = [0, 10, 25, 50, 75, 90, 99, 100]
+    vals = [percentile(s, q) for q in qs]
+    assert vals == sorted(vals)
 
 
 def test_fair_queue_idle_tenant_banks_no_credit():
@@ -210,6 +246,97 @@ def test_admission_error_on_full_queue(setup):
     fe.serve()  # the two admitted ones still complete
 
 
+def test_engine_tap_records_ttft_only_with_tokens(setup):
+    # ISSUE 10 bugfix: a drain callback that delivered NO tokens for this
+    # lane must not stamp t_first — TTFT means "a generated token exists"
+    import types
+
+    cfg, params = setup
+    fe = _frontend(cfg, params)
+    fe.backend.stats["ticks"] = 0  # the engine-style counter the tap samples
+    req = _req(1, "t")
+    fe.requests[1] = req
+    fe.live["aid"] = req
+    view = types.SimpleNamespace(agent_id="aid", kind="main")
+    fe._engine_tap(view, "", [])
+    assert req.t_first is None and req.tokens_out == 0
+    fe._engine_tap(view, "xy", [1, 2])
+    assert req.t_first is not None and req.tokens_out == 2
+    t0 = req.t_first
+    fe._engine_tap(view, "z", [3])
+    assert req.t_first == t0  # first-token time never moves
+
+
+def test_stream_backlog_overflow_flags_cancel(setup):
+    # a consumer that stops reading past max_buffered_chars gets its
+    # request flagged; the boundary cancel retires ONLY that request
+    cfg, params = setup
+    fe = _frontend(cfg, params)
+    stalled = fe.submit("stalled consumer", max_new_tokens=64,
+                        max_buffered_chars=4)
+    healthy = fe.submit("healthy consumer", max_new_tokens=16)
+    fe.serve()
+    assert stalled.done and stalled.status == "cancelled"
+    assert stalled.overflowed
+    assert healthy.done and healthy.status == "ok"
+    assert fe.backend.stats["cancelled"] == 1
+    req = fe.requests[healthy.rid]
+    fin = {r.rid: r for r in fe.backend.finished}[req.backend_id]
+    # the healthy stream is untouched by the neighbor's overflow-cancel
+    assert healthy.text == fin.text == \
+        fe.backend.tok.decode(fin.tokens[fin.prompt_len:])
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_admission_under_parked_and_resuming_lanes(setup, pipeline):
+    """`_admit_batch`'s free-lane computation subtracts queued prompts AND
+    in-flight resume tickets: a resuming lane must not be double-booked
+    (over-admission), and a parked-without-resume lane must not be
+    stranded (under-admission)."""
+    cfg, params = setup
+    srv = BatchServer(params, cfg, ByteTokenizer(cfg.vocab_size), n_lanes=2,
+                      capacity=128, sampling=SamplingParams(greedy=True))
+    fe = ServingFrontend(srv, tenants={"t": 1.0})
+    s1 = fe.submit("park victim one", tenant="t", max_new_tokens=24)
+    s2 = fe.submit("steady stream two", tenant="t", max_new_tokens=24)
+    srv._admit()  # boundary: both admitted onto the two lanes
+    assert fe.metrics()["fairness"]["admission_rounds"] == 2
+    rid1 = fe.requests[s1.rid].backend_id
+
+    # --- resuming: the freed lane is reserved by the resume ticket ------
+    assert srv.park(rid1)
+    assert srv.unpark(rid1)  # lane 0 free, but a resume ticket holds it
+    s3 = fe.submit("queued three", tenant="t", max_new_tokens=12)
+    admitted = fe._admit_batch()
+    assert admitted == 0, "over-admitted into a lane reserved by a resume"
+    assert len(srv.queue) == 0 and len(fe.fq) == 1
+
+    # the resume lands at the next boundary, then the queued request takes
+    # whatever frees up — nobody is stranded
+    fe.serve(pipeline=pipeline)
+    assert s1.done and s1.status == "ok"
+    assert s2.done and s2.status == "ok"
+    assert s3.done and s3.status == "ok"
+    assert fe.pending() == 0 and len(fe.fq) == 0
+
+    # --- parked without resume: the freed lane is genuinely free --------
+    s4 = fe.submit("park victim four", tenant="t", max_new_tokens=48)
+    s5 = fe.submit("waiter five", tenant="t", max_new_tokens=8)
+    srv._admit()
+    rid4 = fe.requests[s4.rid].backend_id
+    assert srv.park(rid4)
+    s6 = fe.submit("queued six", tenant="t", max_new_tokens=8)
+    admitted = fe._admit_batch()
+    assert admitted == 1, "stranded a free lane while a request was parked"
+    srv._admit()  # prefill the admission the hook queued
+    assert all(r is not None for r in srv.lanes)
+    assert srv.unpark(rid4)
+    fe.serve(pipeline=pipeline)
+    for s in (s4, s5, s6):
+        assert s.done and s.status == "ok", (s.rid, s.status)
+    assert fe.pending() == 0
+
+
 # ---------------------------------------------------------------------------
 # front-end over CortexEngine
 # ---------------------------------------------------------------------------
@@ -280,3 +407,29 @@ def test_engine_cancel_running_at_boundary(setup):
     eng.run(8)  # next boundary honors the cancel
     assert s.done and s.status == "cancelled"
     assert fe.pending() == 0
+
+
+def test_serve_budget_raises_on_stuck_retirement(setup):
+    # ISSUE 10 bugfix regression: serve() used to treat max_ticks as a
+    # per-iteration cap on an unbounded `while pending()` loop — a lane
+    # whose retire_main keeps refusing (side streams target it) spun
+    # forever. Now the budget is total and exhaustion raises with the
+    # stuck rids.
+    cfg, params = setup
+    tok = ByteTokenizer(cfg.vocab_size)
+    eng = CortexEngine(
+        Prism(params, cfg), tok, n_main=1, max_side=2, main_capacity=128,
+        inject_tokens=8, theta=-1.0, sampling=SamplingParams(greedy=True),
+        sync_every=4, pipeline=True, side_max_steps=10_000,
+    )
+    fe = ServingFrontend(eng, tenants={"t": 1.0})
+    # the [TASK:] tag spawns a side targeting lane 0 at submit; with a
+    # 10k-step side budget the lane's retirement is refused at every
+    # boundary long past the request's own 4-token budget
+    s = fe.submit("please [TASK: keep thinking] go", tenant="t",
+                  max_new_tokens=4)
+    with pytest.raises(ServeStalled) as exc:
+        fe.serve(max_ticks=64)
+    assert exc.value.stuck == [1]
+    assert not s.done  # never mis-reported as complete
+    assert fe.requests[1].tokens_out >= 4  # budget met, retirement refused
